@@ -1,0 +1,74 @@
+"""Shared benchmark harness: a small LM trained on the synthetic pipeline.
+
+Every table benchmark trains the same ~6M-param transformer under identical
+hyperparameters and varies only the optimizer/quantizer — the paper's
+protocol ("out-of-box transfer from full-precision optimizer to low-bit
+optimizer without extra hyperparameter tuning").
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import LayerSpec, ModelConfig, init_model, loss_fn
+from repro.train.train_loop import build_train_step, make_train_state
+
+BENCH_CFG = ModelConfig(
+    name="bench-lm",
+    num_layers=2,
+    d_model=128,
+    num_heads=4,
+    num_kv_heads=2,
+    head_dim=32,
+    d_ff=384,
+    vocab_size=512,
+    blocks=(LayerSpec("dense", 0),) * 2,
+    remat=False,
+)
+
+DATA_CFG = DataConfig(vocab_size=512, seq_len=64, global_batch=16, seed=0)
+
+
+def train_small_lm(optimizer, steps: int = 150, cfg: ModelConfig = BENCH_CFG,
+                   seed: int = 0) -> Dict[str, float]:
+    """Train the benchmark LM; returns summary metrics."""
+    params, _ = init_model(jax.random.PRNGKey(seed), cfg)
+    p0 = jax.tree_util.tree_map(lambda x: np.asarray(x), params)
+    state = make_train_state(params, optimizer)
+    step_fn = jax.jit(build_train_step(cfg, optimizer))
+    data = SyntheticLM(DATA_CFG)
+
+    losses: List[float] = []
+    t0 = time.perf_counter()
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}
+        state, metrics = step_fn(state, batch)
+        losses.append(float(metrics["loss"]))
+    wall = time.perf_counter() - t0
+
+    max_delta = max(
+        float(np.max(np.abs(np.asarray(b).astype(np.float32) - a.astype(np.float32))))
+        for a, b in zip(
+            jax.tree_util.tree_leaves(p0), jax.tree_util.tree_leaves(state.params)
+        )
+    )
+    window = max(1, len(losses) // 10)
+    return {
+        "loss_first": float(np.mean(losses[:window])),
+        "loss_final": float(np.mean(losses[-window:])),
+        "unstable": float(not np.isfinite(losses).all() or max_delta > 50.0),
+        "max_param_delta": max_delta,
+        "us_per_step": wall / steps * 1e6,
+    }
+
+
+def emit(rows: List[Tuple[str, float, str]]):
+    """Print the required ``name,us_per_call,derived`` CSV rows."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,48 @@
+"""Benchmark orchestrator. One function per paper table/figure; prints
+``name,us_per_call,derived`` CSV (plus roofline summaries when the dry-run
+artifacts exist)."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import emit
+from benchmarks.tables import ALL_TABLES
+
+
+def roofline_rows():
+    rows = []
+    for path, tag in (("results/dryrun.json", "dryrun"),
+                      ("results/roofline.json", "roofline")):
+        if not os.path.exists(path):
+            continue
+        for r in json.load(open(path)):
+            if r.get("status") != "ok" or "roofline" not in r:
+                continue
+            if r.get("mesh", "single") != "single":
+                continue
+            t = r["roofline"]
+            dom = max(
+                ("compute", "memory", "collective"),
+                key=lambda k: t[f"{k}_s"],
+            )
+            rows.append((
+                f"{tag}/{r['arch']}/{r['shape']}",
+                0.0,
+                f"compute_s={t['compute_s']:.4g} memory_s={t['memory_s']:.4g} "
+                f"collective_s={t['collective_s']:.4g} bottleneck={dom} "
+                f"useful_ratio={t['useful_ratio']:.3f}",
+            ))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for fn in ALL_TABLES:
+        emit(fn())
+    emit(roofline_rows())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,39 @@
+"""Quickstart: swap 32-bit AdamW for the paper's 4-bit AdamW on a small LM.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import reduced_config
+from repro.core.optimizers import adamw32, adamw4bit, state_nbytes
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_model
+from repro.train.train_loop import build_train_step, make_train_state
+
+
+def train(optimizer, steps=40):
+    cfg = reduced_config("internlm2-1.8b")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    state = make_train_state(params, optimizer)
+    step_fn = jax.jit(build_train_step(cfg, optimizer))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 64, 8, seed=0))
+    for t in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}
+        state, metrics = step_fn(state, batch)
+        if t % 10 == 0:
+            print(f"  step {t:3d}  loss {float(metrics['loss']):.4f}")
+    return state
+
+
+def main():
+    for name, opt in (("32-bit AdamW", adamw32(3e-3)),
+                      ("4-bit AdamW (paper)", adamw4bit(3e-3))):
+        print(f"== {name} ==")
+        state = train(opt)
+        print(f"  optimizer-state bytes: {state_nbytes(state.opt_state):,}")
+
+
+if __name__ == "__main__":
+    main()

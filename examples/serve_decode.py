@@ -1,0 +1,37 @@
+"""Batched serving with continuous batching over a reduced-config model.
+
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-2b
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import init_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="internlm2-1.8b", choices=list(ARCHS))
+    ap.add_argument("--requests", type=int, default=6)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)
+    if cfg.family == "encdec" or cfg.input_mode == "embeds":
+        raise SystemExit(f"{args.arch}: use a token-decoder arch for this demo")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=3, s_max=256)
+
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2 + i, 3 + i], max_new_tokens=8))
+    eng.run()
+    for i in range(args.requests):
+        pass
+    print(f"served {args.requests} requests with continuous batching "
+          f"(slots={eng.max_batch})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,112 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from the result JSONs
+(static sections — validation + §Perf — live in the template below)."""
+
+import json
+import os
+
+GB = 1e9
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/GB:.2f}"
+
+
+def dryrun_tables():
+    rows = json.load(open("results/dryrun.json"))
+    out = []
+    for mesh in ("single", "multi"):
+        out.append(f"\n### Mesh: {mesh} "
+                   f"({'16x16 = 256 chips (data, model)' if mesh=='single' else '2x16x16 = 512 chips (pod, data, model)'})\n")
+        out.append("| arch | shape | status | compile_s | args GB/dev | temps GB/dev | coll ops (module) |")
+        out.append("|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r.get("mesh", "single") != mesh and r["status"] != "skipped":
+                continue
+            if r["status"] == "skipped":
+                if mesh == "single":
+                    out.append(f"| {r['arch']} | {r['shape']} | SKIP: {r['reason'][:60]} | - | - | - | - |")
+                continue
+            m = r.get("memory", {})
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['status']} | {r.get('compile_s','-')} "
+                f"| {fmt_bytes(m.get('argument_bytes'))} | {fmt_bytes(m.get('temp_bytes'))} "
+                f"| {r.get('collectives',{}).get('ops','-'):.0f} |"
+            )
+    return "\n".join(out)
+
+
+def roofline_table():
+    """Measured (decomposed-compile) rows preferred; any cell the probe sweep
+    has not reached yet falls back to the module-level terms from the
+    dry-run (flagged: scan bodies counted once -> lower bound)."""
+    measured = (
+        json.load(open("results/roofline.json"))
+        if os.path.exists("results/roofline.json")
+        else []
+    )
+    have = {(r["arch"], r["shape"]) for r in measured}
+    rows = list(measured)
+    for r in json.load(open("results/dryrun.json")):
+        if r.get("mesh") != "single" or r.get("status") != "ok":
+            continue
+        if (r["arch"], r["shape"]) in have:
+            continue
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "status": "ok",
+            "roofline": r["roofline"], "module_level": True,
+        })
+    out = [
+        "| arch | shape | compute_s | memory_s | collective_s | bottleneck | MODEL_FLOPS | useful ratio | what would move the dominant term |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    HINTS = {
+        ("memory", "train"): "fewer fp32 round-trips in the update path / larger microbatch to amortize weight traffic",
+        ("memory", "prefill"): "larger attention tiles so weights+KV stream once per tile",
+        ("memory", "decode"): "decode is weight-streaming; batch growth amortizes weight reads",
+        ("collective", "train"): "cut TP all-reduces (sequence-parallel layout) or overlap with compute",
+        ("collective", "prefill"): "overlap TP collectives with per-chunk attention compute",
+        ("collective", "decode"): "replicate small kv projections; batch more tokens per gather",
+        ("compute", "train"): "already compute-bound: raise MFU via larger matmul tiles",
+        ("compute", "prefill"): "already compute-bound: fuse attention chains",
+        ("compute", "decode"): "already compute-bound (unusual for decode)",
+    }
+    for r in rows:
+        if r.get("status") == "skipped":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | SKIP | - | - | {r['reason'][:48]} |")
+            continue
+        if r.get("status") != "ok":
+            out.append(f"| {r['arch']} | {r['shape']} | - | - | - | ERROR | - | - | {r.get('error','')[:48]} |")
+            continue
+        t = r["roofline"]
+        shape_kind = ("train" if "train" in r["shape"] else
+                      "prefill" if "prefill" in r["shape"] else "decode")
+        hint = HINTS.get((t["bottleneck"], shape_kind), "")
+        flag = " †" if r.get("module_level") else ""
+        out.append(
+            f"| {r['arch']} | {r['shape']}{flag} | {t['compute_s']:.4f} | {t['memory_s']:.4f} "
+            f"| {t['collective_s']:.4f} | **{t['bottleneck']}** | {t['model_flops_total']:.3g} "
+            f"| {t['useful_ratio']:.3f} | {hint} |"
+        )
+    out.append(
+        "\n† module-level terms from the full-step compile (scan bodies "
+        "counted once — lower bounds); all other rows are decomposed-compile "
+        "measurements."
+    )
+    return "\n".join(out)
+
+
+HEADER = open("EXPERIMENTS_template.md").read() if os.path.exists("EXPERIMENTS_template.md") else ""
+
+
+def main():
+    tmpl = open("EXPERIMENTS_template.md").read()
+    tmpl = tmpl.replace("{{DRYRUN_TABLES}}", dryrun_tables())
+    tmpl = tmpl.replace("{{ROOFLINE_TABLE}}", roofline_table())
+    open("EXPERIMENTS.md", "w").write(tmpl)
+    print("EXPERIMENTS.md written,", len(tmpl), "chars")
+
+
+if __name__ == "__main__":
+    main()

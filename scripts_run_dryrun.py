@@ -1,0 +1,10 @@
+import os, sys
+sys.argv = ["dryrun"]
+os.environ.setdefault("PYTHONPATH", "src")
+from repro.launch.dryrun import run_all
+
+ORDER = ["xlstm-125m", "internlm2-1.8b", "hymba-1.5b", "gemma2-2b",
+         "qwen2-vl-2b", "qwen3-4b", "chatglm3-6b", "whisper-large-v3",
+         "phi3.5-moe-42b-a6.6b", "mixtral-8x7b"]
+run_all("results/dryrun.json", meshes=("single", "multi"), archs=ORDER)
+print("DRYRUN SWEEP COMPLETE")

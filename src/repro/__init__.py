@@ -1,0 +1,4 @@
+"""repro: Memory Efficient Optimizers with 4-bit States (NeurIPS 2023) —
+production-grade JAX/TPU framework reproduction."""
+
+__version__ = "1.0.0"

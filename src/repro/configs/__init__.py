@@ -1,0 +1,101 @@
+"""Architecture registry + assigned input shapes + reduced smoke configs."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Tuple
+
+from repro.models import LayerSpec, ModelConfig
+
+from repro.configs import (
+    chatglm3_6b,
+    gemma2_2b,
+    hymba_1_5b,
+    internlm2_1_8b,
+    mixtral_8x7b,
+    phi35_moe,
+    qwen2_vl_2b,
+    qwen3_4b,
+    whisper_large_v3,
+    xlstm_125m,
+)
+
+ARCHS = {
+    "phi3.5-moe-42b-a6.6b": phi35_moe.config,
+    "mixtral-8x7b": mixtral_8x7b.config,
+    "chatglm3-6b": chatglm3_6b.config,
+    "gemma2-2b": gemma2_2b.config,
+    "qwen3-4b": qwen3_4b.config,
+    "internlm2-1.8b": internlm2_1_8b.config,
+    "whisper-large-v3": whisper_large_v3.config,
+    "xlstm-125m": xlstm_125m.config,
+    "qwen2-vl-2b": qwen2_vl_2b.config,
+    "hymba-1.5b": hymba_1_5b.config,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k requires sub-quadratic / bounded decode state (DESIGN.md §4).
+LONG_CONTEXT_ARCHS = ("mixtral-8x7b", "xlstm-125m", "hymba-1.5b")
+
+
+def get_config(name: str) -> ModelConfig:
+    return ARCHS[name]()
+
+
+def cell_is_runnable(arch: str, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch, shape) dry-run cell."""
+    if shape == "long_500k" and arch not in LONG_CONTEXT_ARCHS:
+        return False, "pure full-attention arch: 500k decode state unbounded"
+    return True, ""
+
+
+def reduced_config(name: str) -> ModelConfig:
+    """Small same-family config for CPU smoke tests: shrunk layers/width/
+    experts/vocab, same block structure and feature flags."""
+    cfg = get_config(name)
+    L = min(cfg.num_layers, 4)
+    # preserve the pattern flavor over the first L layers
+    blocks = tuple(
+        LayerSpec(b.kind, min(b.window, 16) if b.window else 0)
+        for b in cfg.blocks[:L]
+    )
+    enc_blocks = tuple(
+        LayerSpec(b.kind, 0) for b in cfg.encoder_blocks[: min(len(cfg.encoder_blocks), 2)]
+    )
+    heads = min(cfg.num_heads, 4)
+    kv = max(1, min(cfg.num_kv_heads, heads))
+    while heads % kv:
+        kv -= 1
+    return dataclasses.replace(
+        cfg,
+        num_layers=L,
+        blocks=blocks,
+        encoder_blocks=enc_blocks,
+        d_model=64,
+        num_heads=heads,
+        num_kv_heads=kv,
+        head_dim=16,
+        d_ff=128 if cfg.d_ff else 0,
+        vocab_size=512,
+        num_experts=min(cfg.num_experts, 4),
+        ssm_state=min(cfg.ssm_state, 8),
+        gla_chunk=16,
+        moe_group_size=64,
+        mrope_sections=(4, 2, 2),
+        remat=False,
+    )

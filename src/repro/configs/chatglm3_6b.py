@@ -1,0 +1,22 @@
+"""chatglm3-6b [arXiv:2406.12793].
+
+28L d_model=4096 32H (GQA kv=2) d_ff=13696 vocab=65024; 2d RoPE (rotary on
+the first half of head_dim), GQA with 2 kv groups.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="chatglm3-6b",
+        num_layers=28,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=13696,
+        vocab_size=65024,
+        rope_variant="rope2d",
+        blocks=(LayerSpec("dense", 0),) * 28,
+    )

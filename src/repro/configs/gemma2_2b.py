@@ -1,0 +1,29 @@
+"""gemma2-2b [arXiv:2408.00118].
+
+26L d_model=2304 8H (GQA kv=4) d_ff=9216 vocab=256000; alternating
+local(4096)/global attention, attention-logit softcap 50, final-logit softcap
+30, sandwich (pre+post) norms, tied embeddings, GeGLU. head_dim=256.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+WINDOW = 4096
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="gemma2-2b",
+        num_layers=26,
+        d_model=2304,
+        num_heads=8,
+        num_kv_heads=4,
+        head_dim=256,
+        d_ff=9216,
+        vocab_size=256000,
+        attn_softcap=50.0,
+        final_softcap=30.0,
+        sandwich_norm=True,
+        tie_embeddings=True,
+        act="gelu",
+        blocks=(LayerSpec("dense", WINDOW), LayerSpec("dense", 0)) * 13,
+    )

@@ -1,0 +1,32 @@
+"""hymba-1.5b [arXiv:2411.13676].
+
+32L d_model=1600 25H (GQA kv=5, head_dim 64) d_ff=5504, ssm_state=16,
+vocab=32001. Every block runs attention and Mamba/SSD heads in PARALLEL and
+averages the (rescaled) outputs; layers 0, 15, 31 use global attention, the
+rest sliding-window 1024 (aperiodic layout => run-grouped scan units).
+Hymba's meta tokens are omitted (noted in DESIGN.md §8).
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+WINDOW = 1024
+GLOBAL_LAYERS = (0, 15, 31)
+
+
+def config() -> ModelConfig:
+    blocks = tuple(
+        LayerSpec("hymba", 0 if i in GLOBAL_LAYERS else WINDOW)
+        for i in range(32)
+    )
+    return ModelConfig(
+        name="hymba-1.5b",
+        num_layers=32,
+        d_model=1600,
+        num_heads=25,
+        num_kv_heads=5,
+        head_dim=64,
+        d_ff=5504,
+        vocab_size=32001,
+        ssm_state=16,
+        blocks=blocks,
+    )

@@ -1,0 +1,20 @@
+"""internlm2-1.8b [arXiv:2403.17297].
+
+24L d_model=2048 16H (GQA kv=8) d_ff=8192 vocab=92544.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="internlm2-1.8b",
+        num_layers=24,
+        d_model=2048,
+        num_heads=16,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=8192,
+        vocab_size=92544,
+        blocks=(LayerSpec("dense", 0),) * 24,
+    )

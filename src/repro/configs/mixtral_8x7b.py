@@ -1,0 +1,27 @@
+"""mixtral-8x7b [arXiv:2401.04088].
+
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000, MoE 8 experts top-2,
+sliding-window attention (window 4096) — which is what bounds the decode
+cache and qualifies mixtral for long_500k.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+WINDOW = 4096
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b",
+        num_layers=32,
+        d_model=4096,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=14336,
+        vocab_size=32000,
+        num_experts=8,
+        top_k=2,
+        rope_theta=1e6,
+        blocks=(LayerSpec("moe", WINDOW),) * 32,
+    )

@@ -1,0 +1,27 @@
+"""qwen2-vl-2b [arXiv:2409.12191].
+
+28L d_model=1536 12H (GQA kv=2) d_ff=8960 vocab=151936; M-RoPE with
+(t, h, w) sections (16, 24, 24) over head_dim=128; dynamic-resolution vision
+frontend is a STUB — input_specs() provides patch embeddings (B, S, d_model)
+plus 3-stream position ids. Tied embeddings.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen2-vl-2b",
+        num_layers=28,
+        d_model=1536,
+        num_heads=12,
+        num_kv_heads=2,
+        head_dim=128,
+        d_ff=8960,
+        vocab_size=151936,
+        rope_variant="mrope",
+        mrope_sections=(16, 24, 24),
+        input_mode="embeds",
+        tie_embeddings=True,
+        blocks=(LayerSpec("dense", 0),) * 28,
+    )

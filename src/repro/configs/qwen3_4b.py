@@ -1,0 +1,23 @@
+"""qwen3-4b [hf:Qwen/Qwen3-4B].
+
+36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936; per-head q/k RMS
+normalization (qk_norm), head_dim=128 (projection wider than d_model).
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="qwen3-4b",
+        num_layers=36,
+        d_model=2560,
+        num_heads=32,
+        num_kv_heads=8,
+        head_dim=128,
+        d_ff=9728,
+        vocab_size=151936,
+        qk_norm=True,
+        rope_theta=1e6,
+        blocks=(LayerSpec("dense", 0),) * 36,
+    )

@@ -1,0 +1,32 @@
+"""whisper-large-v3 [arXiv:2212.04356].
+
+Encoder-decoder transformer backbone: 32 encoder + 32 decoder layers,
+d_model=1280 20H d_ff=5120 vocab=51866, LayerNorm + GELU, sinusoidal
+positions. The conv audio frontend is a STUB — input_specs() provides
+precomputed frame embeddings (B, frames, d_model), per the assignment.
+Shape convention for enc-dec: seq_len splits evenly into encoder frames and
+decoder tokens (documented in EXPERIMENTS.md).
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-large-v3",
+        num_layers=32,
+        d_model=1280,
+        num_heads=20,
+        num_kv_heads=20,
+        head_dim=64,
+        d_ff=5120,
+        vocab_size=51866,
+        family="encdec",
+        norm_type="layernorm",
+        rope_variant="none",
+        act="gelu",
+        gated_mlp=False,
+        tie_embeddings=True,
+        blocks=(LayerSpec("dec", 0),) * 32,
+        encoder_blocks=(LayerSpec("enc", 0),) * 32,
+    )

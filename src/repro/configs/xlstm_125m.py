@@ -1,0 +1,25 @@
+"""xlstm-125m [arXiv:2405.04517].
+
+12L d_model=768, 4 heads, vocab=50304, d_ff=0 (projections live inside the
+xLSTM blocks). Pattern: three mLSTM blocks then one sLSTM block, repeated
+(period-4 scan unit). Constant-size recurrent state => long_500k eligible.
+"""
+
+from repro.models import LayerSpec, ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="xlstm-125m",
+        num_layers=12,
+        d_model=768,
+        num_heads=4,
+        num_kv_heads=4,
+        head_dim=192,
+        d_ff=0,
+        vocab_size=50304,
+        blocks=(
+            LayerSpec("mlstm", 0), LayerSpec("mlstm", 0),
+            LayerSpec("mlstm", 0), LayerSpec("slstm", 0),
+        ) * 3,
+    )

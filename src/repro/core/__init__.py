@@ -1,0 +1,27 @@
+"""Core: the paper's contribution — 4-bit quantized optimizer states.
+
+Quantization (mappings/normalization/packing/quantizer) + the compressed
+optimizer family (Alg. 1 framework, 4-bit AdamW, 4-bit Factor, baselines).
+"""
+
+from repro.core.quantizer import (
+    B128_DE,
+    B128_DE0,
+    B2048_DE,
+    RANK1_LINEAR,
+    QuantConfig,
+    QuantizedTensor,
+    dequantize,
+    quantize,
+)
+
+__all__ = [
+    "QuantConfig",
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "B128_DE",
+    "B128_DE0",
+    "B2048_DE",
+    "RANK1_LINEAR",
+]

@@ -1,0 +1,145 @@
+"""Quantization mappings T: code -> [0,1] (or [-1,1] signed).
+
+Implements the three mappings used in the paper (App. E.2):
+
+* ``linear``  — T(i) = (i+1)/2^b, zero EXCLUDED by construction (used for the
+  second moment; smallest representable value at 4 bits is 1/16 = 0.0625).
+* ``de``      — dynamic exponent mapping [Dettmers 2015] with the bitsandbytes
+  corner cases: unsigned code 0 -> 0.0, unsigned code 1 -> 1.0; in the signed
+  case the (sign=1, magnitude=0) pattern is repurposed as +1.0, so -1.0 is not
+  representable and the map is asymmetric (App. E.2).
+* ``de0``     — ``de`` with the zero code removed (the paper's DE-0), leaving
+  2^b - 1 quantization points; fixes the second-moment zero-point problem at
+  the cost of one wasted code.
+
+A mapping is materialized as a sorted fp32 table of length <= 2^b. Encoding is
+round-to-nearest via midpoint comparison (branchless, TPU friendly) with an
+optional stochastic-rounding variant (App. E.3).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "mapping_table",
+    "encode",
+    "decode",
+    "encode_stochastic",
+    "MAPPINGS",
+]
+
+MAPPINGS = ("linear", "de", "de0")
+
+
+def _de_fraction_levels(F: int) -> np.ndarray:
+    """Midpoint fraction levels for F fraction bits, distributed in (0.1, 1)."""
+    j = np.arange(2**F + 1, dtype=np.float64)
+    p = (1.0 - 0.1) / (2**F) * j + 0.1
+    return (p[:-1] + p[1:]) / 2.0
+
+
+def _de_unsigned_values(width: int, special_one: bool = True) -> np.ndarray:
+    """All dynamic-exponent values for ``width``-bit unsigned codes.
+
+    Code 0 -> 0.0 and (if ``special_one``) code 1 -> 1.0, the bitsandbytes
+    corner cases; otherwise the code's binary representation is
+    [E leading zeros | 1 | F fraction bits] and the value is
+    10^-E * fraction[F]. In the signed case only the all-zeros pattern is
+    special (App. E.2), so magnitudes are built with ``special_one=False``.
+    """
+    values = np.zeros(2**width, dtype=np.float64)
+    values[0] = 0.0
+    start = 1
+    if special_one:
+        values[1] = 1.0
+        start = 2
+    for code in range(start, 2**width):
+        bits = format(code, f"0{width}b")
+        E = len(bits) - len(bits.lstrip("0"))  # leading zeros
+        frac_bits = bits[E + 1 :]
+        F = len(frac_bits)
+        k = int(frac_bits, 2) if F > 0 else 0
+        frac = _de_fraction_levels(F)[k]
+        values[code] = (10.0**-E) * frac
+    return values
+
+
+@functools.lru_cache(maxsize=None)
+def _mapping_table_np(kind: str, bits: int, signed: bool) -> np.ndarray:
+    """Sorted numpy table of quantization points for (kind, bits, signed)."""
+    if kind not in MAPPINGS:
+        raise ValueError(f"unknown mapping kind {kind!r}; want one of {MAPPINGS}")
+    if bits < 2 or bits > 8:
+        raise ValueError(f"bits must be in [2, 8], got {bits}")
+
+    if kind == "linear":
+        if signed:
+            # Symmetric signed linear map excluding zero: +/- (i+1)/2^(b-1).
+            half = (np.arange(2 ** (bits - 1), dtype=np.float64) + 1) / 2 ** (bits - 1)
+            vals = np.concatenate([-half[::-1], half])
+        else:
+            vals = (np.arange(2**bits, dtype=np.float64) + 1) / 2**bits
+        return np.sort(vals).astype(np.float32)
+
+    # dynamic exponent ("de" / "de0")
+    if signed:
+        mag = _de_unsigned_values(bits - 1, special_one=False)
+        # sign=0 patterns: +mag (pattern 0 -> 0.0). sign=1 patterns: -mag,
+        # except magnitude-pattern 0 which is repurposed as +1.0, so -1.0 is
+        # not representable (the map is asymmetric, App. E.2).
+        vals = np.concatenate([mag, np.array([1.0]), -mag[1:]])
+    else:
+        vals = _de_unsigned_values(bits)
+    vals = np.sort(np.unique(vals))
+    if kind == "de0":
+        vals = vals[vals != 0.0]
+    return vals.astype(np.float32)
+
+
+def mapping_table(kind: str, bits: int, signed: bool) -> jnp.ndarray:
+    """Return the sorted fp32 quantization-point table as a jnp array."""
+    return jnp.asarray(_mapping_table_np(kind, bits, signed))
+
+
+def _midpoints(table: jnp.ndarray) -> jnp.ndarray:
+    return (table[1:] + table[:-1]) / 2.0
+
+
+def encode(n: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Round-to-nearest code indices into ``table`` (branchless).
+
+    idx = sum_k [n > midpoint_k]; exact round-to-nearest for a sorted table
+    (ties go to the lower code, matching argmin-first behaviour).
+    """
+    mids = _midpoints(table)
+    # (..., 1) > (K-1,) -> (..., K-1); sum over the last axis.
+    idx = jnp.sum(n[..., None] > mids, axis=-1)
+    return idx.astype(jnp.uint8)
+
+
+def decode(codes: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    """Dequantize code indices back to fp32 quantization points."""
+    return jnp.take(table, codes.astype(jnp.int32), axis=0)
+
+
+def encode_stochastic(
+    n: jnp.ndarray, table: jnp.ndarray, key: jax.Array
+) -> jnp.ndarray:
+    """Stochastic rounding (App. E.3): round to the bracketing codes with
+    probability proportional to proximity; values outside the table clamp."""
+    k = table.shape[0]
+    # Lower bracket: largest code with T(code) <= n (clamped to [0, K-2]).
+    lo = jnp.clip(jnp.sum(n[..., None] >= table, axis=-1) - 1, 0, k - 2)
+    t_lo = jnp.take(table, lo, axis=0)
+    t_hi = jnp.take(table, lo + 1, axis=0)
+    span = jnp.maximum(t_hi - t_lo, 1e-12)
+    p_hi = jnp.clip((n - t_lo) / span, 0.0, 1.0)
+    u = jax.random.uniform(key, n.shape)
+    idx = lo + (u < p_hi).astype(lo.dtype)
+    return idx.astype(jnp.uint8)

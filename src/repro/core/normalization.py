@@ -1,0 +1,131 @@
+"""Normalization operators N: scale tensor entries into the unit interval.
+
+Implements the granularities discussed in the paper (Sec. 2.2 / 4.2):
+
+* per-tensor   — one absmax scale for the whole tensor.
+* block-wise   — flatten row-major, blocks of size B, absmax per block
+                 (B2048 reproduces Dettmers et al.; the paper uses B128).
+* rank-1       — per-dim max statistics; per-element scale is the min over
+                 dims (App. G, Alg. 4). Falls back to per-tensor for 1-d.
+
+All operators are signed-safe: N(x) = sign(x) * N(|x|) (App. E.1), i.e. we
+normalize by absolute-value statistics and keep the sign. Every operator
+returns ``(normalized, scales)`` and has a matching ``*_denorm`` that maps the
+stored scales back to a per-element scale array.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "pertensor_normalize",
+    "pertensor_denorm",
+    "blockwise_normalize",
+    "blockwise_denorm",
+    "rank1_normalize",
+    "rank1_denorm",
+    "blockwise_num_blocks",
+]
+
+_EPS = 1e-12
+
+
+def _guard(s: jnp.ndarray) -> jnp.ndarray:
+    """Avoid division by zero for all-zero tensors/blocks/rows."""
+    return jnp.where(s > 0, s, jnp.ones_like(s))
+
+
+# ---------------------------------------------------------------------------
+# per-tensor
+# ---------------------------------------------------------------------------
+
+
+def pertensor_normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    s = _guard(jnp.max(jnp.abs(x)))
+    return x / s, s[None]  # scales shape (1,)
+
+
+def pertensor_denorm(scales: jnp.ndarray, shape: Tuple[int, ...]) -> jnp.ndarray:
+    return jnp.broadcast_to(scales[0], shape)
+
+
+# ---------------------------------------------------------------------------
+# block-wise
+# ---------------------------------------------------------------------------
+
+
+def blockwise_num_blocks(size: int, block: int) -> int:
+    return -(-size // block)
+
+
+def blockwise_normalize(
+    x: jnp.ndarray, block: int
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Row-major flattened block-wise absmax normalization.
+
+    Returns (normalized (same shape as x), scales (num_blocks,)).
+    """
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    nb = blockwise_num_blocks(n, block)
+    pad = nb * block - n
+    padded = jnp.pad(flat, (0, pad))
+    blocks = padded.reshape(nb, block)
+    s = _guard(jnp.max(jnp.abs(blocks), axis=1))  # (nb,)
+    normed = (blocks / s[:, None]).reshape(-1)[:n].reshape(x.shape)
+    return normed, s
+
+
+def blockwise_denorm(
+    scales: jnp.ndarray, shape: Tuple[int, ...], block: int
+) -> jnp.ndarray:
+    """Per-element scale array from block scales."""
+    n = 1
+    for d in shape:
+        n *= d
+    per_elem = jnp.repeat(scales, block)[:n]
+    return per_elem.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# rank-1 (App. G)
+# ---------------------------------------------------------------------------
+
+
+def rank1_normalize(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[jnp.ndarray, ...]]:
+    """Rank-1 normalization: per-dim absmax statistics, elementwise min.
+
+    For x of rank p, stats[r] has shape (x.shape[r],): the absmax over all
+    other dims. The per-element scale is min_r stats[r][i_r]. Rank-1 on a 1-d
+    tensor degenerates to per-tensor... no: for 1-d the per-dim stat IS |x|
+    itself, which would make every element its own scale; following the paper
+    we treat 1-d as per-tensor.
+    """
+    if x.ndim <= 1:
+        normed, s = pertensor_normalize(x)
+        return normed, (s,)
+    a = jnp.abs(x)
+    stats = []
+    for r in range(x.ndim):
+        axes = tuple(i for i in range(x.ndim) if i != r)
+        stats.append(jnp.max(a, axis=axes))  # (d_r,)
+    scale = rank1_denorm(tuple(stats), x.shape)
+    return x / scale, tuple(stats)
+
+
+def rank1_denorm(
+    stats: Tuple[jnp.ndarray, ...], shape: Tuple[int, ...]
+) -> jnp.ndarray:
+    """Per-element scale = min over dims of broadcast per-dim statistics."""
+    if len(shape) <= 1:
+        return jnp.broadcast_to(_guard(stats[0][0]), shape)
+    scale = None
+    for r, stat in enumerate(stats):
+        view = [1] * len(shape)
+        view[r] = shape[r]
+        b = stat.reshape(view)
+        scale = b if scale is None else jnp.minimum(scale, b)
+    return _guard(jnp.broadcast_to(scale, shape))

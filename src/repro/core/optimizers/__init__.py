@@ -1,0 +1,62 @@
+"""Optimizer zoo: the paper's 4-bit optimizers plus every compared baseline."""
+
+from repro.core.optimizers.adafactor import adafactor
+from repro.core.optimizers.adamw import (
+    M_4BIT,
+    M_8BIT,
+    V_4BIT,
+    V_8BIT,
+    adamw32,
+    adamw4bit,
+    adamw8bit,
+    factor4bit,
+    quantized_adamw,
+)
+from repro.core.optimizers.base import (
+    FactoredMoment,
+    Optimizer,
+    QuantPolicy,
+    state_nbytes,
+)
+from repro.core.optimizers.schedule import (
+    constant,
+    linear_warmup_cosine,
+    linear_warmup_linear_decay,
+)
+from repro.core.optimizers.sgdm import sgdm, sgdm4bit
+from repro.core.optimizers.sm3 import sm3
+
+OPTIMIZER_REGISTRY = {
+    "adamw32": adamw32,
+    "adamw8bit": adamw8bit,
+    "adamw4bit": adamw4bit,
+    "factor4bit": factor4bit,
+    "adafactor": adafactor,
+    "sm3": sm3,
+    "sgdm": sgdm,
+    "sgdm4bit": sgdm4bit,
+}
+
+__all__ = [
+    "Optimizer",
+    "QuantPolicy",
+    "FactoredMoment",
+    "state_nbytes",
+    "quantized_adamw",
+    "adamw32",
+    "adamw8bit",
+    "adamw4bit",
+    "factor4bit",
+    "adafactor",
+    "sm3",
+    "sgdm",
+    "sgdm4bit",
+    "constant",
+    "linear_warmup_linear_decay",
+    "linear_warmup_cosine",
+    "OPTIMIZER_REGISTRY",
+    "M_4BIT",
+    "V_4BIT",
+    "M_8BIT",
+    "V_8BIT",
+]

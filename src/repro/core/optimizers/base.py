@@ -1,0 +1,181 @@
+"""Optimizer interface + the compression framework of Alg. 1.
+
+An ``Optimizer`` is an (init, update) pair over parameter pytrees:
+
+    state              = opt.init(params)
+    params, state      = opt.update(grads, state, params)
+
+State moments may be stored compressed (``QuantizedTensor``), factored
+(``FactoredMoment``), or raw fp32 — decided per-leaf at init time by a
+``QuantPolicy`` implementing the paper's App. D.1 rules (size threshold 4096,
+optional path exclusions such as embeddings for the 8-bit baseline).
+
+The compress/decompress of Alg. 1 lives in ``compress_moment`` /
+``decompress_moment``: line 3 (decompress), lines 4 (inner optimizer A) and 5
+(compress) are what each concrete optimizer's ``update`` composes per leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Callable, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantConfig, QuantizedTensor, dequantize, quantize
+
+__all__ = [
+    "Optimizer",
+    "QuantPolicy",
+    "FactoredMoment",
+    "compress_moment",
+    "decompress_moment",
+    "tree_paths",
+    "state_nbytes",
+]
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    """A gradient-based optimizer as an (init, update) pair (paper's A)."""
+
+    init: Callable[[PyTree], PyTree]
+    update: Callable[..., Tuple[PyTree, PyTree]]
+    name: str = "optimizer"
+
+
+@jax.tree_util.register_pytree_node_class
+class FactoredMoment:
+    """Adafactor-style factored second moment over the trailing two dims.
+
+    For a tensor of shape (..., n, m): ``row`` has shape (..., n) (mean over
+    m) and ``col`` has shape (..., m) (mean over n). The reconstruction is
+    row ⊗ col / mean(row) (Shazeer & Stern, 2018).
+    """
+
+    def __init__(self, row: jnp.ndarray, col: jnp.ndarray, shape: Tuple[int, ...]):
+        self.row = row
+        self.col = col
+        self.shape = tuple(shape)
+
+    def tree_flatten(self):
+        return (self.row, self.col), (self.shape,)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        row, col = children
+        return cls(row, col, aux[0])
+
+    @staticmethod
+    def zeros(shape: Tuple[int, ...]) -> "FactoredMoment":
+        return FactoredMoment(
+            jnp.zeros(shape[:-1], jnp.float32),
+            jnp.zeros(shape[:-2] + shape[-1:], jnp.float32),
+            shape,
+        )
+
+    def reconstruct(self) -> jnp.ndarray:
+        """v̂ = row ⊗ col / mean(row); guard all-zero rows at t=0."""
+        denom = jnp.maximum(jnp.mean(self.row, axis=-1, keepdims=True), 1e-30)
+        return (self.row / denom)[..., :, None] * self.col[..., None, :]
+
+    def ema_update(self, sq: jnp.ndarray, b2: float) -> "FactoredMoment":
+        row = b2 * self.row + (1 - b2) * jnp.mean(sq, axis=-1)
+        col = b2 * self.col + (1 - b2) * jnp.mean(sq, axis=-2)
+        return FactoredMoment(row, col, self.shape)
+
+    def nbytes(self) -> int:
+        return int(self.row.size * 4 + self.col.size * 4)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"FactoredMoment(shape={self.shape})"
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    """Per-leaf compression decision (paper App. D.1).
+
+    - leaves with <= ``threshold`` elements stay fp32
+    - leaves whose path matches any ``exclude`` regex stay fp32
+      (used by the 8-bit baseline to skip embeddings)
+    - second moment may additionally be *factored* for ndim >= 2
+      (the 4-bit Factor optimizer).
+    """
+
+    config: Optional[QuantConfig] = None
+    threshold: int = 4096
+    exclude: Tuple[str, ...] = ()
+    factor_2d: bool = False  # second-moment factorization for ndim >= 2
+
+    def mode(self, path: str, shape: Tuple[int, ...]) -> str:
+        """-> 'raw' | 'quant' | 'factor'."""
+        size = 1
+        for d in shape:
+            size *= d
+        if self.config is None and not self.factor_2d:
+            return "raw"
+        if size <= self.threshold:
+            return "raw"
+        for pat in self.exclude:
+            if re.search(pat, path):
+                return "raw"
+        if self.factor_2d and len(shape) >= 2:
+            return "factor"
+        if self.config is None:
+            return "raw"
+        return "quant"
+
+
+def tree_paths(tree: PyTree) -> PyTree:
+    """Pytree of '/'-joined string paths, same structure as ``tree``."""
+
+    def _name(entry) -> str:
+        if isinstance(entry, jax.tree_util.DictKey):
+            return str(entry.key)
+        if isinstance(entry, jax.tree_util.SequenceKey):
+            return str(entry.idx)
+        if isinstance(entry, jax.tree_util.GetAttrKey):
+            return entry.name
+        return str(entry)
+
+    paths_leaves = jax.tree_util.tree_flatten_with_path(tree)[0]
+    paths = ["/".join(_name(k) for k in path) for path, _ in paths_leaves]
+    treedef = jax.tree_util.tree_structure(tree)
+    return jax.tree_util.tree_unflatten(treedef, paths)
+
+
+def compress_moment(
+    x: jnp.ndarray,
+    mode: str,
+    config: Optional[QuantConfig],
+    key: Optional[jax.Array] = None,
+):
+    """Alg. 1 line 5 for one leaf."""
+    if mode == "quant":
+        return quantize(x, config, key=key)
+    return x.astype(jnp.float32)
+
+
+def decompress_moment(s) -> jnp.ndarray:
+    """Alg. 1 line 3 for one leaf."""
+    if isinstance(s, QuantizedTensor):
+        return dequantize(s)
+    if isinstance(s, FactoredMoment):
+        return s.reconstruct()
+    return s
+
+
+def state_nbytes(state: PyTree) -> int:
+    """Persistent bytes of an optimizer state pytree (Tab. 4/5 accounting)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(
+        state, is_leaf=lambda x: isinstance(x, (QuantizedTensor, FactoredMoment))
+    ):
+        if isinstance(leaf, (QuantizedTensor, FactoredMoment)):
+            total += leaf.nbytes()
+        else:
+            total += int(leaf.size * leaf.dtype.itemsize)
+    return total

@@ -1,0 +1,36 @@
+"""Learning-rate schedules (linear warmup+decay as in the paper's App. D)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["constant", "linear_warmup_linear_decay", "linear_warmup_cosine"]
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_warmup_linear_decay(lr: float, warmup: int, total: int):
+    """The schedule used across the paper's fine-tuning benchmarks."""
+
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / jnp.maximum(1.0, float(warmup))
+        decay = lr * jnp.maximum(
+            0.0, (float(total) - step) / jnp.maximum(1.0, float(total - warmup))
+        )
+        return jnp.where(step < warmup, warm, decay)
+
+    return f
+
+
+def linear_warmup_cosine(lr: float, warmup: int, total: int, final_frac: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = lr * step / jnp.maximum(1.0, float(warmup))
+        t = jnp.clip((step - warmup) / jnp.maximum(1.0, float(total - warmup)), 0, 1)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return jnp.where(step < warmup, warm, lr * cos)
+
+    return f

@@ -1,0 +1,39 @@
+"""Nibble packing: two 4-bit codes per uint8, packed along the last axis.
+
+TPU adaptation note: codes are packed pairwise along the *last* (lane) axis
+(low nibble = even index, high nibble = odd index), so the packed tensor keeps
+the parameter's leading dims: a (n, m) code tensor packs to (n, ceil(m/2)).
+This keeps optimizer-state layouts aligned with parameter sharding (ZeRO
+shards the leading dim) and makes unpacking a vectorizable shift/mask on VREG
+lanes — no gathers. Odd last dims are zero-padded; callers track the logical
+size.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["pack4", "unpack4", "packed_last_dim"]
+
+
+def packed_last_dim(last: int) -> int:
+    return (last + 1) // 2
+
+
+def pack4(codes: jnp.ndarray) -> jnp.ndarray:
+    """Pack uint8 4-bit codes (values < 16) pairwise along the last axis."""
+    last = codes.shape[-1]
+    if last % 2:
+        pad = [(0, 0)] * (codes.ndim - 1) + [(0, 1)]
+        codes = jnp.pad(codes, pad)
+    lo = codes[..., 0::2].astype(jnp.uint8)
+    hi = codes[..., 1::2].astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.uint8)
+
+
+def unpack4(packed: jnp.ndarray, last: int) -> jnp.ndarray:
+    """Unpack bytes back into uint8 codes with logical last dim ``last``."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    interleaved = jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1], -1)
+    return interleaved[..., :last]

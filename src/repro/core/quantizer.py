@@ -1,0 +1,172 @@
+"""Quantizer Q = M ∘ N and the QuantizedTensor pytree container.
+
+This is the paper's Sec. 2.2 formulation made concrete:
+
+    codes = M_{T,b}( N(x) )         (compress)
+    x~    = N^{-1}( T(codes) )      (decompress)
+
+``QuantConfig`` names a quantizer the way the paper does (Norm./Map.), e.g.
+B128/DE  == QuantConfig(normalization="blockwise", block_size=128, mapping="de")
+Rank-1/Linear == QuantConfig(normalization="rank1", mapping="linear").
+
+4-bit codes are stored nibble-packed (two per uint8); 8-bit codes are stored
+raw. Tensors with <= ``threshold`` elements (default 4096, App. D.1) are kept
+in fp32 by the pytree-level helpers.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import mappings, normalization, packing
+
+__all__ = ["QuantConfig", "QuantizedTensor", "quantize", "dequantize"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Static description of a quantizer (hashable; safe as pytree aux data)."""
+
+    bits: int = 4
+    normalization: str = "blockwise"  # pertensor | blockwise | rank1
+    block_size: int = 128
+    mapping: str = "de"  # linear | de | de0
+    signed: bool = True
+    stochastic_rounding: bool = False
+    threshold: int = 4096
+
+    @property
+    def name(self) -> str:
+        norm = {
+            "pertensor": "PerTensor",
+            "blockwise": f"B{self.block_size}",
+            "rank1": "Rank-1",
+        }[self.normalization]
+        mp = {"linear": "Linear", "de": "DE", "de0": "DE-0"}[self.mapping]
+        sr = "+SR" if self.stochastic_rounding else ""
+        return f"{norm}/{mp}{sr}@{self.bits}bit"
+
+    def table(self) -> jnp.ndarray:
+        return mappings.mapping_table(self.mapping, self.bits, self.signed)
+
+
+# Paper-named quantizer presets.
+B2048_DE = QuantConfig(normalization="blockwise", block_size=2048, mapping="de")
+B128_DE = QuantConfig(normalization="blockwise", block_size=128, mapping="de")
+B128_DE0 = QuantConfig(
+    normalization="blockwise", block_size=128, mapping="de0", signed=False
+)
+RANK1_LINEAR = QuantConfig(normalization="rank1", mapping="linear", signed=False)
+
+
+@jax.tree_util.register_pytree_node_class
+class QuantizedTensor:
+    """Compressed tensor: packed codes + normalization scales + static meta."""
+
+    def __init__(
+        self,
+        codes: jnp.ndarray,
+        scales: Tuple[jnp.ndarray, ...],
+        shape: Tuple[int, ...],
+        config: QuantConfig,
+    ):
+        self.codes = codes
+        self.scales = scales
+        self.shape = tuple(shape)
+        self.config = config
+
+    # -- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        return (self.codes, self.scales), (self.shape, self.config)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        codes, scales = children
+        shape, config = aux
+        return cls(codes, scales, shape, config)
+
+    # ----------------------------------------------------------------------
+    @property
+    def size(self) -> int:
+        n = 1
+        for d in self.shape:
+            n *= d
+        return n
+
+    def nbytes(self) -> int:
+        """Persistent storage cost in bytes (codes + scales)."""
+        total = self.codes.size * self.codes.dtype.itemsize
+        for s in self.scales:
+            total += s.size * s.dtype.itemsize
+        return int(total)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"QuantizedTensor(shape={self.shape}, {self.config.name})"
+
+
+def _normalize(x: jnp.ndarray, config: QuantConfig):
+    if config.normalization == "pertensor":
+        n, s = normalization.pertensor_normalize(x)
+        return n, (s,)
+    if config.normalization == "blockwise":
+        n, s = normalization.blockwise_normalize(x, config.block_size)
+        return n, (s,)
+    if config.normalization == "rank1":
+        n, stats = normalization.rank1_normalize(x)
+        return n, tuple(stats)
+    raise ValueError(f"unknown normalization {config.normalization!r}")
+
+
+def _denorm_scale(
+    scales: Tuple[jnp.ndarray, ...], shape: Tuple[int, ...], config: QuantConfig
+) -> jnp.ndarray:
+    if config.normalization == "pertensor":
+        return normalization.pertensor_denorm(scales[0], shape)
+    if config.normalization == "blockwise":
+        return normalization.blockwise_denorm(scales[0], shape, config.block_size)
+    if config.normalization == "rank1":
+        if len(shape) <= 1:
+            return normalization.pertensor_denorm(scales[0], shape)
+        return normalization.rank1_denorm(scales, shape)
+    raise ValueError(f"unknown normalization {config.normalization!r}")
+
+
+def quantize(
+    x: jnp.ndarray, config: QuantConfig, key: Optional[jax.Array] = None
+) -> QuantizedTensor:
+    """Compress a tensor. ``key`` is required iff stochastic_rounding."""
+    x = x.astype(jnp.float32)
+    n, scales = _normalize(x, config)
+    table = config.table()
+    if config.stochastic_rounding and key is not None:
+        codes = mappings.encode_stochastic(n, table, key)
+    else:
+        # Round-to-nearest; also the fallback when an SR config is used
+        # without a PRNG key (e.g. when quantizing deterministic zeros at init).
+        codes = mappings.encode(n, table)
+    if config.bits == 4:
+        codes = packing.pack4(codes)  # packs along the last axis
+    return QuantizedTensor(codes, scales, x.shape, config)
+
+
+def dequantize(q: QuantizedTensor) -> jnp.ndarray:
+    """Decompress back to fp32 (the paper's N^{-1} ∘ T)."""
+    config = q.config
+    codes = q.codes
+    if config.bits == 4:
+        codes = packing.unpack4(codes, q.shape[-1])
+    codes = codes.reshape(q.shape)
+    vals = mappings.decode(codes, config.table())
+    scale = _denorm_scale(q.scales, q.shape, config)
+    return vals * scale
+
+
+def state_bytes(x: Any) -> int:
+    """Persistent bytes of an optimizer-state leaf (quantized or raw)."""
+    if isinstance(x, QuantizedTensor):
+        return x.nbytes()
+    return int(x.size * x.dtype.itemsize)

@@ -1,0 +1,74 @@
+"""Deterministic synthetic token pipeline, host-sharded and elastic.
+
+Addressing is (seed, step, host_index, num_hosts): any host subset can
+reproduce its shard after an elastic rescale — no shared state, no cursor
+files beyond the step number already in the checkpoint. The synthetic stream
+is a Zipf-ish unigram mix with enough structure (local n-gram correlations)
+that perplexity meaningfully decreases during the example runs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["DataConfig", "SyntheticLM", "host_batch"]
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    vocab_size: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+
+
+class SyntheticLM:
+    """Markov-flavored synthetic LM stream: token_t depends on token_{t-1}
+    through a fixed random permutation mixed with Zipf noise."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        v = cfg.vocab_size
+        self.perm = rng.permutation(v)
+        ranks = np.arange(1, v + 1, dtype=np.float64)
+        p = 1.0 / ranks**1.1
+        self.unigram = p / p.sum()
+
+    def batch_at(self, step: int, host: int = 0, num_hosts: int = 1) -> Dict[str, np.ndarray]:
+        """The (deterministic) host-local slice of the global batch at step."""
+        cfg = self.cfg
+        assert cfg.global_batch % num_hosts == 0
+        local = cfg.global_batch // num_hosts
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, host, num_hosts])
+        )
+        base = rng.choice(cfg.vocab_size, size=(local, cfg.seq_len), p=self.unigram)
+        toks = base.copy()
+        # inject first-order structure: with prob .5, token = perm[prev]
+        use_prev = rng.random((local, cfg.seq_len)) < 0.5
+        toks[:, 1:] = np.where(
+            use_prev[:, 1:], self.perm[toks[:, :-1]], toks[:, 1:]
+        )
+        labels = np.concatenate(
+            [toks[:, 1:], np.full((local, 1), -1, np.int64)], axis=1
+        )
+        return {
+            "tokens": toks.astype(np.int32),
+            "labels": labels.astype(np.int32),
+        }
+
+    def iterate(self, start_step: int = 0, host: int = 0, num_hosts: int = 1) -> Iterator[Dict[str, np.ndarray]]:
+        step = start_step
+        while True:
+            yield self.batch_at(step, host, num_hosts)
+            step += 1
+
+
+def host_batch(stream: SyntheticLM, step: int, mesh=None) -> Dict[str, np.ndarray]:
+    """Single-process convenience: the whole global batch on this host."""
+    return stream.batch_at(step, host=0, num_hosts=1)

@@ -1,0 +1,2 @@
+"""Pallas TPU kernels for the paper's compute hot-spot: the fused 4-bit
+optimizer update (dequant -> AdamW -> requant in one VMEM-resident pass)."""

@@ -1,0 +1,94 @@
+"""jit'd wrappers around the Pallas kernels with backend dispatch.
+
+`fused_adamw4_leaf` is the integration point used by
+``repro.core.optimizers.adamw.quantized_adamw(use_kernel=True)``: it takes a
+(param, grad, QuantizedTensor m, QuantizedTensor v) leaf and returns the
+updated triple, computing the new rank-1 scales in a prepass and running the
+elementwise dequant->AdamW->requant in one Pallas kernel.
+
+Backend selection: on TPU the kernel runs compiled; elsewhere it runs in
+``interpret=True`` mode (Python emulation — correct but slow), unless
+``REPRO_FORCE_INTERPRET=0`` routes to the pure-jnp reference instead.
+"""
+
+from __future__ import annotations
+
+import os
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantizedTensor
+from repro.kernels import ref
+from repro.kernels.adamw4bit import fused_adamw4
+
+__all__ = ["fused_adamw4_leaf", "kernel_backend"]
+
+
+def kernel_backend() -> str:
+    """'tpu' -> compiled pallas; 'interpret' -> pallas interpret mode;
+    'ref' -> pure-jnp oracle (fast on CPU)."""
+    override = os.environ.get("REPRO_KERNEL_BACKEND")
+    if override:
+        return override
+    platform = jax.default_backend()
+    if platform == "tpu":
+        return "tpu"
+    return "ref"
+
+
+def _structured_scales(m_s: QuantizedTensor) -> jnp.ndarray:
+    """Flat (nb,) B128 scales -> structured (R, C/128)."""
+    R, C = m_s.shape
+    return m_s.scales[0].reshape(R, C // 128)
+
+
+
+def fused_adamw4_leaf(
+    p: jnp.ndarray,
+    g: jnp.ndarray,
+    m_s: QuantizedTensor,
+    v_s: QuantizedTensor,
+    lr: jnp.ndarray,
+    b1: float,
+    b2: float,
+    eps: float,
+    weight_decay: float,
+    bc1: jnp.ndarray,
+    bc2: jnp.ndarray,
+) -> Tuple[jnp.ndarray, QuantizedTensor, QuantizedTensor]:
+    """One fused-kernel AdamW step for a 2-d leaf with 4-bit m (B128) and
+    4-bit v (rank-1). Falls back to the reference composition for layouts
+    the kernel does not cover (caller guards eligibility)."""
+    R, C = p.shape
+    m_table = m_s.config.table()
+    v_table = v_s.config.table()
+    g32 = g.astype(jnp.float32)
+
+    # Prepass: rank-1 stats of the UPDATED v (XLA fuses dequant+max).
+    v_old = ref.dequant_rank1(v_s.codes, v_s.scales[0], v_s.scales[1], v_table)
+    v_new_expr = b2 * v_old + (1.0 - b2) * g32 * g32
+    v_r_new = jnp.max(v_new_expr, axis=1)
+    v_c_new = jnp.max(v_new_expr, axis=0)
+
+    backend = kernel_backend()
+    if backend == "ref":
+        w_new, m_packed, m_scale, v_packed, v_r, v_c = ref.fused_adamw4_reference(
+            p, g, m_s.codes, _structured_scales(m_s), v_s.codes,
+            v_s.scales[0], v_s.scales[1], m_table, v_table,
+            lr, b1, b2, eps, weight_decay, bc1, bc2,
+        )
+    else:
+        w_new, m_packed, m_scale, v_packed = fused_adamw4(
+            p, g, m_s.codes, _structured_scales(m_s), v_s.codes,
+            v_s.scales[0], v_s.scales[1], v_r_new, v_c_new,
+            m_table, v_table, lr, bc1, bc2,
+            b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+            interpret=(backend != "tpu"),
+        )
+        v_r, v_c = v_r_new, v_c_new
+
+    m2 = QuantizedTensor(m_packed, (m_scale.reshape(-1),), m_s.shape, m_s.config)
+    v2 = QuantizedTensor(v_packed, (v_r, v_c), v_s.shape, v_s.config)
+    return w_new, m2, v2

@@ -1,0 +1,103 @@
+"""Standalone Pallas kernels: block-wise 4-bit quantize / dequantize.
+
+Used by checkpoint compression and by the serving engine for on-the-fly
+state compaction; also the simplest validation target for the shared
+decode/encode/pack primitives reused by the fused AdamW kernel.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.adamw4bit import (_decode16, _encode16, _guard, _pack,
+                                     _unpack, pick_tile_c, pick_tile_r)
+
+__all__ = ["quantize_blockwise_4bit", "dequantize_blockwise_4bit"]
+
+_BLOCK = 128
+
+
+def _quant_kernel(x_ref, table_ref, packed_ref, scale_ref, *, num_points: int):
+    x = x_ref[...].astype(jnp.float32)
+    tr, tc = x.shape
+    blocks = x.reshape(tr, tc // _BLOCK, _BLOCK)
+    scale = _guard(jnp.max(jnp.abs(blocks), axis=-1))
+    scale_ref[...] = scale
+    n = (blocks / scale[..., None]).reshape(tr, tc)
+    packed_ref[...] = _pack(_encode16(n, table_ref, num_points))
+
+
+def _dequant_kernel(packed_ref, scale_ref, table_ref, x_ref):
+    codes = _unpack(packed_ref[...])
+    vals = _decode16(codes, table_ref)
+    x_ref[...] = vals * jnp.repeat(scale_ref[...], _BLOCK, axis=1)
+
+
+def _pad16(t):
+    t = t.astype(jnp.float32)
+    return jnp.pad(t, (0, 16 - t.shape[0])).reshape(1, 16)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_r", "tile_c"))
+def quantize_blockwise_4bit(
+    x: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    interpret: bool = False,
+    tile_r: int = 128,
+    tile_c: int = 512,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    R, C = x.shape
+    tr, tc = pick_tile_r(R, tile_r), pick_tile_c(C, tile_c)
+    assert R % tr == 0 and C % tc == 0 and tc % 256 == 0, (R, C, tr, tc)
+    kernel = functools.partial(_quant_kernel, num_points=int(table.shape[0]))
+    return pl.pallas_call(
+        kernel,
+        grid=(R // tr, C // tc),
+        in_specs=[
+            pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 16), lambda i, j: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tr, tc // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((tr, tc // _BLOCK), lambda i, j: (i, j)),
+        ],
+        out_shape=(
+            jax.ShapeDtypeStruct((R, C // 2), jnp.uint8),
+            jax.ShapeDtypeStruct((R, C // _BLOCK), jnp.float32),
+        ),
+        interpret=interpret,
+    )(x, _pad16(table))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "tile_r", "tile_c"))
+def dequantize_blockwise_4bit(
+    packed: jnp.ndarray,
+    scale: jnp.ndarray,
+    table: jnp.ndarray,
+    *,
+    interpret: bool = False,
+    tile_r: int = 128,
+    tile_c: int = 512,
+) -> jnp.ndarray:
+    R, Ch = packed.shape
+    C = Ch * 2
+    tr, tc = pick_tile_r(R, tile_r), pick_tile_c(C, tile_c)
+    assert R % tr == 0 and C % tc == 0 and tc % 256 == 0, (R, C, tr, tc)
+    return pl.pallas_call(
+        _dequant_kernel,
+        grid=(R // tr, C // tc),
+        in_specs=[
+            pl.BlockSpec((tr, tc // 2), lambda i, j: (i, j)),
+            pl.BlockSpec((tr, tc // _BLOCK), lambda i, j: (i, j)),
+            pl.BlockSpec((1, 16), lambda i, j: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tr, tc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((R, C), jnp.float32),
+        interpret=interpret,
+    )(packed, scale, _pad16(table))

@@ -1,0 +1,132 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the ground truth the kernels must match bit-for-bit (codes) /
+allclose (floats). They intentionally mirror the kernel's *structured* layout:
+2-d tensors with the last dim a multiple of 256 (so nibble pairs and B128
+blocks never straddle tiles), m quantized B128/<table> per row-major block,
+v quantized rank-1/<table> with externally supplied new scales.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+__all__ = [
+    "unpack_codes",
+    "pack_codes",
+    "dequant_blockwise",
+    "dequant_rank1",
+    "encode_table",
+    "fused_adamw4_reference",
+]
+
+
+def unpack_codes(packed: jnp.ndarray) -> jnp.ndarray:
+    """(R, C/2) uint8 -> (R, C) uint8 codes (low nibble first)."""
+    lo = packed & jnp.uint8(0x0F)
+    hi = (packed >> 4) & jnp.uint8(0x0F)
+    return jnp.stack([lo, hi], axis=-1).reshape(packed.shape[0], -1)
+
+
+def pack_codes(codes: jnp.ndarray) -> jnp.ndarray:
+    """(R, C) uint8 -> (R, C/2) uint8 (low nibble first)."""
+    pairs = codes.reshape(codes.shape[0], -1, 2)
+    return (pairs[..., 0] | (pairs[..., 1] << 4)).astype(jnp.uint8)
+
+
+def decode_table(codes: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table, codes.astype(jnp.int32), axis=0)
+
+
+def encode_table(n: jnp.ndarray, table: jnp.ndarray) -> jnp.ndarray:
+    mids = (table[1:] + table[:-1]) / 2.0
+    return jnp.sum(n[..., None] > mids, axis=-1).astype(jnp.uint8)
+
+
+def _guard(s: jnp.ndarray) -> jnp.ndarray:
+    return jnp.where(s > 0, s, jnp.ones_like(s))
+
+
+def dequant_blockwise(
+    packed: jnp.ndarray, scale: jnp.ndarray, table: jnp.ndarray, block: int = 128
+) -> jnp.ndarray:
+    """packed (R, C/2), scale (R, C/block) -> (R, C) fp32."""
+    codes = unpack_codes(packed)
+    vals = decode_table(codes, table)
+    R, C = vals.shape
+    per_elem = jnp.repeat(scale, block, axis=1)
+    return vals * per_elem
+
+
+def dequant_rank1(
+    packed: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray, table: jnp.ndarray
+) -> jnp.ndarray:
+    """packed (R, C/2), r (R,), c (C,) -> (R, C) fp32."""
+    codes = unpack_codes(packed)
+    vals = decode_table(codes, table)
+    scale = _guard(jnp.minimum(r[:, None], c[None, :]))
+    return vals * scale
+
+
+def quant_blockwise(
+    x: jnp.ndarray, table: jnp.ndarray, block: int = 128
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """(R, C) -> packed (R, C/2), scale (R, C/block)."""
+    R, C = x.shape
+    blocks = x.reshape(R, C // block, block)
+    scale = _guard(jnp.max(jnp.abs(blocks), axis=-1))  # (R, C/block)
+    n = (blocks / scale[..., None]).reshape(R, C)
+    codes = encode_table(n, table)
+    return pack_codes(codes), scale
+
+
+def quant_rank1_given_scales(
+    x: jnp.ndarray, r: jnp.ndarray, c: jnp.ndarray, table: jnp.ndarray
+) -> jnp.ndarray:
+    """(R, C) with given new rank-1 stats -> packed codes (R, C/2)."""
+    scale = _guard(jnp.minimum(r[:, None], c[None, :]))
+    codes = encode_table(x / scale, table)
+    return pack_codes(codes)
+
+
+def fused_adamw4_reference(
+    w: jnp.ndarray,          # (R, C) param
+    g: jnp.ndarray,          # (R, C) grad
+    m_packed: jnp.ndarray,   # (R, C/2)
+    m_scale: jnp.ndarray,    # (R, C/128)
+    v_packed: jnp.ndarray,   # (R, C/2)
+    v_r: jnp.ndarray,        # (R,)
+    v_c: jnp.ndarray,        # (C,)
+    m_table: jnp.ndarray,    # (16,) signed DE
+    v_table: jnp.ndarray,    # (16,) unsigned Linear
+    lr: jnp.ndarray,
+    b1: float,
+    b2: float,
+    eps: float,
+    weight_decay: float,
+    bc1: jnp.ndarray,
+    bc2: jnp.ndarray,
+):
+    """Oracle for the fused kernel: dequant -> AdamW (Eq. 1) -> requant.
+
+    Returns (w_new, m_packed_new, m_scale_new, v_packed_new, v_r_new, v_c_new).
+    New rank-1 scales are row/col maxes of the updated v (the kernel receives
+    them precomputed — the two-pass structure described in DESIGN.md §3).
+    """
+    g32 = g.astype(jnp.float32)
+    m = dequant_blockwise(m_packed, m_scale, m_table)
+    v = dequant_rank1(v_packed, v_r, v_c, v_table)
+
+    m_new = b1 * m + (1.0 - b1) * g32
+    v_new = b2 * v + (1.0 - b2) * g32 * g32
+
+    u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
+    w_new = (w.astype(jnp.float32) - lr * (u + weight_decay * w.astype(jnp.float32))).astype(w.dtype)
+
+    m_packed_new, m_scale_new = quant_blockwise(m_new, m_table)
+    v_r_new = jnp.max(v_new, axis=1)
+    v_c_new = jnp.max(v_new, axis=0)
+    v_packed_new = quant_rank1_given_scales(v_new, v_r_new, v_c_new, v_table)
+    return w_new, m_packed_new, m_scale_new, v_packed_new, v_r_new, v_c_new

@@ -1,0 +1,39 @@
+"""Serving CLI: continuous-batching decode on a reduced config.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 8
+"""
+
+import argparse
+
+import jax
+
+from repro.configs import ARCHS, reduced_config
+from repro.models import init_model
+from repro.serve.engine import Request, ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-batch", type=int, default=2)
+    ap.add_argument("--max-new-tokens", type=int, default=8)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch)
+    if cfg.family == "encdec" or cfg.input_mode == "embeds":
+        raise SystemExit(f"{args.arch}: token-decoder archs only in this CLI")
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params, max_batch=args.max_batch, s_max=256)
+    for i in range(args.requests):
+        eng.submit(Request(rid=i, prompt=[1 + i, 2 + i],
+                           max_new_tokens=args.max_new_tokens))
+    eng.run()
+    for i in range(args.requests):
+        pass
+    print(f"served {args.requests} requests, "
+          f"{args.max_new_tokens} tokens each (greedy, continuous batching)")
+
+
+if __name__ == "__main__":
+    main()

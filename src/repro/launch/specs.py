@@ -1,0 +1,77 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, and never allocates — the dry-run lowers
+against these. Modality-stub archs get precomputed embeddings (qwen2-vl
+patches, whisper audio frames) per the assignment.
+
+Enc-dec shape convention: a shape's seq_len splits evenly into encoder
+frames and decoder tokens (whisper train_4k = 2048 frames + 2048 tokens).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeSpec
+from repro.models import ModelConfig, init_serve_cache
+
+__all__ = ["input_specs", "serve_cache_specs", "decode_cache_len"]
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _train_like(cfg: ModelConfig, B: int, S: int, with_labels: bool) -> Dict[str, Any]:
+    batch: Dict[str, Any] = {}
+    if cfg.family == "encdec":
+        Se = Sd = S // 2
+        batch["frames"] = SDS((B, Se, cfg.d_model), jnp.bfloat16)
+        batch["tokens"] = SDS((B, Sd), jnp.int32)
+        if with_labels:
+            batch["labels"] = SDS((B, Sd), jnp.int32)
+        return batch
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = SDS((B, S, cfg.d_model), jnp.bfloat16)
+    else:
+        batch["tokens"] = SDS((B, S), jnp.int32)
+    if cfg.rope_variant == "mrope":
+        batch["positions"] = SDS((3, B, S), jnp.int32)
+    if with_labels:
+        batch["labels"] = SDS((B, S), jnp.int32)
+    return batch
+
+
+def decode_cache_len(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Cache capacity for a decode shape. Enc-dec splits seq in half."""
+    return shape.seq_len // 2 if cfg.family == "encdec" else shape.seq_len
+
+
+def serve_cache_specs(cfg: ModelConfig, B: int, s_max: int):
+    """ShapeDtypeStructs of the decode cache tree (no allocation)."""
+    return jax.eval_shape(lambda: init_serve_cache(cfg, B, s_max))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec) -> Dict[str, Any]:
+    """Inputs for the step function the shape lowers:
+
+    * train  -> train_step batch (tokens/embeds/frames + labels)
+    * prefill-> prefill batch (no labels)
+    * decode -> {tokens (B,), pos (B,), caches, [enc_out]}
+    """
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return _train_like(cfg, B, S, with_labels=True)
+    if shape.kind == "prefill":
+        return _train_like(cfg, B, S, with_labels=False)
+    # decode
+    s_max = decode_cache_len(cfg, shape)
+    out: Dict[str, Any] = {
+        "tokens": SDS((B,), jnp.int32),
+        "pos": SDS((B,), jnp.int32),
+        "caches": serve_cache_specs(cfg, B, s_max),
+    }
+    if cfg.family == "encdec":
+        out["enc_out"] = SDS((B, s_max, cfg.d_model), jnp.bfloat16)
+    return out

@@ -1,0 +1,83 @@
+"""Training CLI: --arch <id> [--reduced] --steps N.
+
+Full configs are intended for the TPU meshes (use dryrun.py to validate the
+distribution); --reduced runs the same code path at CPU scale end-to-end
+(data pipeline -> sharded step -> 4-bit optimizer -> checkpoints).
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced --steps 30
+"""
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS, get_config, reduced_config
+from repro.core.optimizers import (
+    OPTIMIZER_REGISTRY,
+    linear_warmup_linear_decay,
+    state_nbytes,
+)
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import init_model
+from repro.train.checkpoint import CheckpointManager, latest_step
+from repro.train.train_loop import build_train_step, make_train_state
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="CPU-scale config of the same family")
+    ap.add_argument("--optimizer", default="adamw4bit",
+                    choices=list(OPTIMIZER_REGISTRY))
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    args = ap.parse_args()
+
+    cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
+    if not args.reduced:
+        print("note: full config on CPU — expect long compiles; "
+              "use --reduced or launch/dryrun.py for the mesh path")
+    if cfg.input_mode == "embeds" or cfg.family == "encdec":
+        raise SystemExit(
+            f"{args.arch}: modality-stub arch — use examples/ or the dry-run"
+        )
+
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    opt = OPTIMIZER_REGISTRY[args.optimizer](
+        linear_warmup_linear_decay(args.lr, max(1, args.steps // 10), args.steps)
+    )
+    state = make_train_state(params, opt)
+    print(f"arch={cfg.name} optimizer={opt.name} "
+          f"state_bytes={state_nbytes(state.opt_state):,}")
+
+    step_fn = jax.jit(build_train_step(cfg, opt), donate_argnums=(0,))
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+
+    start = (latest_step(args.ckpt_dir) or 0) if args.ckpt_dir else 0
+    if start:
+        state, _ = mgr.restore(jax.eval_shape(lambda: state))
+        print(f"resumed from step {start}")
+
+    for t in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}
+        t0 = time.perf_counter()
+        state, metrics = step_fn(state, batch)
+        if mgr and (t + 1) % args.ckpt_every == 0:
+            mgr.save(t + 1, state)
+        if t % 5 == 0:
+            print(f"step {t:4d} loss {float(metrics['loss']):.4f} "
+                  f"({(time.perf_counter()-t0)*1e3:.0f} ms)")
+    if mgr:
+        mgr.wait()
+
+
+if __name__ == "__main__":
+    main()

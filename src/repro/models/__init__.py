@@ -1,0 +1,25 @@
+"""Model zoo: one composable stack covering the 10 assigned architectures."""
+
+from repro.models.blocks import LayerSpec
+from repro.models.model import (
+    ModelConfig,
+    decode_step,
+    forward_hidden,
+    init_model,
+    init_serve_cache,
+    loss_fn,
+    plan_scan_units,
+    prefill,
+)
+
+__all__ = [
+    "LayerSpec",
+    "ModelConfig",
+    "init_model",
+    "loss_fn",
+    "forward_hidden",
+    "prefill",
+    "decode_step",
+    "init_serve_cache",
+    "plan_scan_units",
+]

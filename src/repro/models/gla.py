@@ -1,0 +1,202 @@
+"""Gated linear recurrences: the shared engine for mLSTM (xLSTM) and the
+Mamba/SSD heads of hymba, plus the strictly-sequential sLSTM cell.
+
+The unifying recurrence (per head, scalar decay a_t ∈ (0, 1]):
+
+    S_t = a_t · S_{t-1} + k_t ⊗ v_t          (matrix state, dk × dv)
+    n_t = a_t · n_{t-1} + k_t                 (normalizer, mLSTM only)
+    y_t = q_t · S_t  [ / max(|q_t · n_t|, 1) ]
+
+``gla_chunked`` evaluates it chunkwise: intra-chunk terms via a masked
+quadratic in the chunk (parallel, MXU-friendly), inter-chunk via the carried
+state — linear in sequence length, which is what qualifies the SSM/hybrid
+archs for the long_500k shape. Decay ratios are computed in log space and
+only as exp(cum_i - cum_j) with j <= i, so they are bounded by 1 (stable).
+
+TPU adaptation note (DESIGN.md §8): we use sigmoid forget / sigmoid input
+gating (GLA form) rather than xLSTM's exponential-gate + max-stabilizer; the
+recurrence structure and state shapes match, which is what the optimizer
+study needs.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["gla_chunked", "gla_decode_step", "GLAState", "slstm_scan"]
+
+
+class GLAState(NamedTuple):
+    S: jnp.ndarray  # (B, H, dk, dv)
+    n: jnp.ndarray  # (B, H, dk)
+
+
+def gla_chunked(
+    q: jnp.ndarray,       # (B, S, H, dk)
+    k: jnp.ndarray,       # (B, S, H, dk)
+    v: jnp.ndarray,       # (B, S, H, dv)
+    log_a: jnp.ndarray,   # (B, S, H) — log decay, <= 0
+    *,
+    chunk: int = 128,
+    normalize: bool = True,
+    init_state: Optional[GLAState] = None,
+    unroll: bool = False,
+) -> Tuple[jnp.ndarray, GLAState]:
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    c = min(chunk, S)
+    pad = (-S) % c
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))  # pad decay 0 => a=1
+    N = q.shape[1] // c
+
+    def to_chunks(x):
+        return x.reshape(B, N, c, *x.shape[2:]).swapaxes(0, 1)
+
+    qs, ks, vs, las = map(to_chunks, (q, k, v, log_a))
+    qs = qs.astype(jnp.float32)
+    ks = ks.astype(jnp.float32)
+    vs = vs.astype(jnp.float32)
+    las = las.astype(jnp.float32)
+
+    if init_state is None:
+        S0 = jnp.zeros((B, H, dk, dv), jnp.float32)
+        n0 = jnp.zeros((B, H, dk), jnp.float32)
+    else:
+        S0, n0 = init_state.S.astype(jnp.float32), init_state.n.astype(jnp.float32)
+
+    tri = jnp.tril(jnp.ones((c, c), bool))  # j <= i
+
+    def body(carry, inp):
+        S_prev, n_prev = carry
+        qc, kc, vc, lac = inp  # (B, c, H, *)
+        cum = jnp.cumsum(lac, axis=1)            # (B, c, H) log A_i
+        last = cum[:, -1]                        # (B, H)
+
+        # inter-chunk: q_i · (A_i · S_prev)
+        q_scaled = qc * jnp.exp(cum)[..., None]
+        y_inter = jnp.einsum("bchk,bhkv->bchv", q_scaled, S_prev)
+
+        # intra-chunk: (q_i · k_j) exp(cum_i - cum_j), j <= i
+        scores = jnp.einsum("bchk,bdhk->bhcd", qc, kc)
+        ratio = jnp.exp(cum[:, :, None, :] - cum[:, None, :, :])  # (B,c,c,H) i,j
+        ratio = jnp.where(tri[None, :, :, None], ratio, 0.0)
+        att = scores * ratio.transpose(0, 3, 1, 2)               # (B,H,c,c)
+        y_intra = jnp.einsum("bhcd,bdhv->bchv", att, vc)
+        y = y_inter + y_intra
+
+        if normalize:
+            n_inter = jnp.exp(cum)[..., None] * n_prev[:, None]   # (B,c,H,dk)
+            n_intra = jnp.einsum("bhcd,bdhk->bchk", ratio.transpose(0, 3, 1, 2), kc)
+            n_i = n_inter + n_intra
+            denom = jnp.abs(jnp.einsum("bchk,bchk->bch", qc, n_i))
+            y = y / jnp.maximum(denom, 1.0)[..., None]
+        else:
+            n_i = None
+
+        # carry updates
+        decay_to_end = jnp.exp(last[:, None] - cum)               # (B,c,H)
+        S_new = jnp.exp(last)[..., None, None] * S_prev + jnp.einsum(
+            "bchk,bchv->bhkv", kc * decay_to_end[..., None], vc
+        )
+        n_new = jnp.exp(last)[..., None] * n_prev + jnp.sum(
+            kc * decay_to_end[..., None], axis=1
+        )
+        return (S_new, n_new), y
+
+    if unroll:
+        carry = (S0, n0)
+        ys_list = []
+        for i in range(N):
+            carry, y = body(carry, (qs[i], ks[i], vs[i], las[i]))
+            ys_list.append(y)
+        (S_f, n_f), ys = carry, jnp.stack(ys_list)
+    else:
+        (S_f, n_f), ys = jax.lax.scan(body, (S0, n0), (qs, ks, vs, las))
+    y = ys.swapaxes(0, 1).reshape(B, N * c, H, dv)[:, :S]
+    return y.astype(v.dtype), GLAState(S_f, n_f)
+
+
+def gla_decode_step(
+    q: jnp.ndarray,      # (B, 1, H, dk)
+    k: jnp.ndarray,      # (B, 1, H, dk)
+    v: jnp.ndarray,      # (B, 1, H, dv)
+    log_a: jnp.ndarray,  # (B, 1, H)
+    state: GLAState,
+    *,
+    normalize: bool = True,
+) -> Tuple[jnp.ndarray, GLAState]:
+    """One recurrent step (serving): O(dk·dv) per head, no history."""
+    a = jnp.exp(log_a[:, 0].astype(jnp.float32))[..., None]  # (B, H, 1)
+    q1 = q[:, 0].astype(jnp.float32)
+    k1 = k[:, 0].astype(jnp.float32)
+    v1 = v[:, 0].astype(jnp.float32)
+    S_new = a[..., None] * state.S + k1[..., None] * v1[..., None, :]
+    n_new = a * state.n + k1
+    y = jnp.einsum("bhk,bhkv->bhv", q1, S_new)
+    if normalize:
+        denom = jnp.abs(jnp.einsum("bhk,bhk->bh", q1, n_new))
+        y = y / jnp.maximum(denom, 1.0)[..., None]
+    return y[:, None].astype(v.dtype), GLAState(S_new, n_new)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — strictly sequential scalar-memory cell with recurrent mixing
+# ---------------------------------------------------------------------------
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray  # (B, D)
+    n: jnp.ndarray  # (B, D)
+    h: jnp.ndarray  # (B, D)
+    m: jnp.ndarray  # (B, D) — exponential-gate stabilizer
+
+
+def slstm_scan(
+    gates_x: jnp.ndarray,  # (B, S, 4, D) — pre-activations of i, f, z, o from W x
+    r_weights: jnp.ndarray,  # (H, 4, dh, dh) block-diagonal recurrent weights
+    n_heads: int,
+    *,
+    init_state: Optional[SLSTMState] = None,
+) -> Tuple[jnp.ndarray, SLSTMState]:
+    """xLSTM sLSTM cell (exponential gating, max stabilizer, per-head
+    block-diagonal recurrence). Sequential by construction — lax.scan over
+    time; the HLO stays one cell body regardless of sequence length."""
+    B, S, _, D = gates_x.shape
+    dh = D // n_heads
+
+    def heads(x):  # (B, D) -> (B, H, dh)
+        return x.reshape(B, n_heads, dh)
+
+    def unheads(x):
+        return x.reshape(B, D)
+
+    if init_state is None:
+        z = jnp.zeros((B, D), jnp.float32)
+        init_state = SLSTMState(z, z, z, jnp.full((B, D), -1e30, jnp.float32))
+
+    def body(state, g_t):  # g_t: (B, 4, D)
+        # recurrent contribution: R h_{t-1}, block-diagonal per head
+        rh = jnp.einsum("hgij,bhj->bghi", r_weights.astype(jnp.float32), heads(state.h))
+        pre = g_t.astype(jnp.float32) + rh.reshape(B, 4, D)
+        i_t, f_t, z_t, o_t = pre[:, 0], pre[:, 1], pre[:, 2], pre[:, 3]
+        # stabilized exponential gating (xLSTM Eq. 15-17)
+        log_f = jax.nn.log_sigmoid(f_t)
+        m_new = jnp.maximum(log_f + state.m, i_t)
+        i_p = jnp.exp(i_t - m_new)
+        f_p = jnp.exp(log_f + state.m - m_new)
+        c_new = f_p * state.c + i_p * jnp.tanh(z_t)
+        n_new = f_p * state.n + i_p
+        h_tilde = c_new / jnp.maximum(jnp.abs(n_new), 1.0)
+        h_new = jax.nn.sigmoid(o_t) * h_tilde
+        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+    gates_t = gates_x.swapaxes(0, 1)  # (S, B, 4, D)
+    final, hs = jax.lax.scan(body, init_state, gates_t)
+    return hs.swapaxes(0, 1).astype(gates_x.dtype), final

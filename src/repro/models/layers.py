@@ -1,0 +1,222 @@
+"""Shared layers: norms, dense, embeddings, RoPE variants, chunked CE loss.
+
+No flax — params are plain nested dicts. Every ``init_*`` returns
+``(params, axes)`` where ``axes`` mirrors the params tree with tuples of
+*logical* dimension names; the sharding rules engine
+(repro.sharding.rules) maps logical names to mesh axes.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "init_dense",
+    "dense",
+    "init_rmsnorm",
+    "rmsnorm",
+    "init_layernorm",
+    "layernorm",
+    "init_embedding",
+    "embed_lookup",
+    "rope",
+    "rope_half",
+    "mrope",
+    "softcap",
+    "chunked_cross_entropy",
+    "sinusoidal_positions",
+]
+
+INIT_STD = 0.02
+COMPUTE_DTYPE = jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# dense / norms / embedding
+# ---------------------------------------------------------------------------
+
+
+def init_dense(key, shape: Tuple[int, ...], axes: Tuple[str, ...], scale: float = INIT_STD):
+    """Weight of ``shape`` with logical ``axes`` (no bias — LLaMA-style)."""
+    assert len(shape) == len(axes), (shape, axes)
+    w = jax.random.normal(key, shape, jnp.float32) * scale
+    return w, axes
+
+
+def dense(x: jnp.ndarray, w: jnp.ndarray, spec: str) -> jnp.ndarray:
+    """einsum with bf16 compute, weights cast in (fp32 master kept outside)."""
+    return jnp.einsum(spec, x.astype(COMPUTE_DTYPE), w.astype(COMPUTE_DTYPE))
+
+
+def init_rmsnorm(dim: int, axis: str = "embed"):
+    return jnp.ones((dim,), jnp.float32), (axis,)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps) * scale
+    return out.astype(COMPUTE_DTYPE)
+
+
+def init_layernorm(dim: int, axis: str = "embed"):
+    params = {"scale": jnp.ones((dim,), jnp.float32), "bias": jnp.zeros((dim,), jnp.float32)}
+    axes = {"scale": (axis,), "bias": (axis,)}
+    return params, axes
+
+
+def layernorm(x: jnp.ndarray, p, eps: float = 1e-5) -> jnp.ndarray:
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return out.astype(COMPUTE_DTYPE)
+
+
+def init_embedding(key, vocab: int, dim: int):
+    w = jax.random.normal(key, (vocab, dim), jnp.float32) * INIT_STD
+    return w, ("vocab", "embed")
+
+
+def embed_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.take(table.astype(COMPUTE_DTYPE), ids, axis=0)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (standard / half-dim / M-RoPE)
+# ---------------------------------------------------------------------------
+
+
+def _rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def _apply_rot(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs split as [first half | second half] (LLaMA convention)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """Standard RoPE. x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = _rope_freqs(x.shape[-1], theta)  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def rope_half(x: jnp.ndarray, positions: jnp.ndarray, theta: float = 10000.0) -> jnp.ndarray:
+    """ChatGLM-style 2d RoPE: rotary applied to the first half of head_dim
+    only; the second half passes through unrotated."""
+    half = x.shape[-1] // 2
+    rotated = rope(x[..., :half], positions, theta)
+    return jnp.concatenate([rotated, x[..., half:]], axis=-1)
+
+
+def mrope(
+    x: jnp.ndarray,
+    positions: jnp.ndarray,
+    sections: Tuple[int, int, int],
+    theta: float = 10000.0,
+) -> jnp.ndarray:
+    """Qwen2-VL M-RoPE: head_dim frequency bands split into (t, h, w)
+    sections, each rotated by its own position stream.
+
+    x: (B, S, H, D); positions: (3, B, S) — temporal/height/width ids (equal
+    for pure text). sum(sections) == D // 2.
+    """
+    D = x.shape[-1]
+    assert sum(sections) == D // 2, (sections, D)
+    freqs = _rope_freqs(D, theta)  # (D/2,)
+    # per-frequency section id: first sections[0] freqs use t, next use h, ...
+    ang_parts = []
+    start = 0
+    for s, sec in enumerate(sections):
+        f = freqs[start : start + sec]
+        ang_parts.append(positions[s][..., None].astype(jnp.float32) * f)
+        start += sec
+    ang = jnp.concatenate(ang_parts, axis=-1)  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _apply_rot(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def sinusoidal_positions(length: int, dim: int) -> jnp.ndarray:
+    """Whisper-style fixed sinusoidal embeddings (S, D)."""
+    return sinusoidal_at(jnp.arange(length, dtype=jnp.float32), dim)
+
+
+def sinusoidal_at(pos: jnp.ndarray, dim: int) -> jnp.ndarray:
+    """Sinusoidal embedding rows for arbitrary positions: (..., ) -> (..., D)."""
+    idx = jnp.arange(dim // 2, dtype=jnp.float32)
+    ang = pos.astype(jnp.float32)[..., None] / jnp.power(10000.0, 2 * idx / dim)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# misc
+# ---------------------------------------------------------------------------
+
+
+def softcap(x: jnp.ndarray, cap: float) -> jnp.ndarray:
+    """Gemma-2 logit soft-capping: cap * tanh(x / cap)."""
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)
+
+
+def chunked_cross_entropy(
+    x: jnp.ndarray,            # (B, S, D) final hidden states (bf16)
+    head: jnp.ndarray,         # (D, V) output projection (fp32 master)
+    labels: jnp.ndarray,       # (B, S) int32, -1 = masked
+    *,
+    logit_cap: float = 0.0,
+    chunk: int = 512,
+    unroll: bool = False,
+) -> jnp.ndarray:
+    """Sequence-chunked softmax CE: logits for only ``chunk`` positions are
+    live at a time, so the (B, S, V) tensor never materializes. This is the
+    production memory trick that keeps large-vocab archs (gemma2: 256k) inside
+    HBM at 32k context."""
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = x.shape[1] // chunk
+    xs = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)       # (N, B, c, D)
+    ls = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)     # (N, B, c)
+
+    def body(carry, inp):
+        loss_sum, count = carry
+        xc, lc = inp
+        logits = jnp.einsum(
+            "bcd,dv->bcv", xc.astype(COMPUTE_DTYPE), head.astype(COMPUTE_DTYPE)
+        ).astype(jnp.float32)
+        if logit_cap > 0:
+            logits = logit_cap * jnp.tanh(logits / logit_cap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(lc, 0)[..., None], axis=-1
+        )[..., 0]
+        mask = (lc >= 0).astype(jnp.float32)
+        loss_sum = loss_sum + jnp.sum((lse - gold) * mask)
+        count = count + jnp.sum(mask)
+        return (loss_sum, count), None
+
+    if unroll:
+        carry = (jnp.float32(0), jnp.float32(0))
+        for i in range(n_chunks):
+            carry, _ = body(carry, (xs[i], ls[i]))
+        loss_sum, count = carry
+    else:
+        # recompute chunk logits in the backward pass (they are the largest
+        # loss-path transient: B x chunk x V fp32 per scan step)
+        (loss_sum, count), _ = jax.lax.scan(
+            jax.checkpoint(body), (jnp.float32(0), jnp.float32(0)), (xs, ls)
+        )
+    return loss_sum / jnp.maximum(count, 1.0)

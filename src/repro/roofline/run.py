@@ -1,0 +1,71 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# device count must be locked before any jax import (same rule as dryrun.py)
+if os.environ.get("REPRO_DRYRUN_DEVICES"):
+    os.environ["XLA_FLAGS"] = (
+        "--xla_force_host_platform_device_count="
+        + os.environ["REPRO_DRYRUN_DEVICES"]
+    )
+
+"""Roofline measurement runner: single-pod mesh, every runnable cell.
+
+    python -m repro.roofline.run --arch xlstm-125m --shape train_4k
+    python -m repro.roofline.run --all --out results/roofline.json
+"""
+
+import argparse
+import json
+import traceback
+
+from repro.configs import ARCHS, SHAPES, cell_is_runnable
+from repro.launch.mesh import make_production_mesh
+from repro.roofline.measured import measure_cell
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=list(ARCHS))
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/roofline.json")
+    ap.add_argument("--order", default=None, help="comma-separated arch order")
+    args = ap.parse_args()
+
+    mesh = make_production_mesh(multi_pod=False)
+
+    if not args.all:
+        rec = measure_cell(args.arch, args.shape, mesh)
+        print(json.dumps(rec, indent=1, default=str))
+        return
+
+    results = []
+    if os.path.exists(args.out):
+        results = json.load(open(args.out))
+    done = {(r["arch"], r["shape"]) for r in results}
+    archs = args.order.split(",") if args.order else list(ARCHS)
+    for arch in archs:
+        for shape_name in SHAPES:
+            if (arch, shape_name) in done:
+                continue
+            runnable, reason = cell_is_runnable(arch, shape_name)
+            if not runnable:
+                results.append({"arch": arch, "shape": shape_name,
+                                "status": "skipped", "reason": reason})
+                continue
+            print(f"=== roofline {arch} x {shape_name} ===", flush=True)
+            try:
+                rec = measure_cell(arch, shape_name, mesh)
+                rec["status"] = "ok"
+            except Exception as e:
+                rec = {"arch": arch, "shape": shape_name, "status": "error",
+                       "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-1500:]}
+                print(rec["error"], flush=True)
+            results.append(rec)
+            os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+            json.dump(results, open(args.out, "w"), indent=1)
+    print("ROOFLINE SWEEP COMPLETE")
+
+
+if __name__ == "__main__":
+    main()

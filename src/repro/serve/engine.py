@@ -1,0 +1,110 @@
+"""Batched serving engine: continuous-batching decode over the model zoo.
+
+Requests enter a queue; the engine packs up to ``max_batch`` active streams
+into the fixed-size cache slots, steps them together with one jitted
+``decode_step``, retires finished streams (EOS or max_tokens), and backfills
+free slots from the queue — the standard continuous-batching loop.
+4-bit-relevant: serving weights are bf16 (no optimizer states at all), so the
+paper's memory story here is about the training side; the engine exists to
+run the decode shapes end-to-end at small scale.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import ModelConfig, decode_step, init_serve_cache
+
+__all__ = ["Request", "ServeEngine"]
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        params,
+        max_batch: int = 4,
+        s_max: int = 256,
+        greedy: bool = True,
+    ):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.s_max = s_max
+        self.greedy = greedy
+        self.caches = init_serve_cache(cfg, max_batch, s_max)
+        self.pos = np.zeros((max_batch,), np.int32)
+        self.active: List[Optional[Request]] = [None] * max_batch
+        self.pending_tokens: List[List[int]] = [[] for _ in range(max_batch)]
+        self.queue: List[Request] = []
+        self._step = jax.jit(
+            lambda p, c, t, q: decode_step(p, cfg, c, t, q)
+        )
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.max_batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                # feed the prompt token-by-token (teacher-forced prefill)
+                self.pending_tokens[slot] = list(req.prompt)
+                self.pos[slot] = 0
+
+    def step(self) -> bool:
+        """One engine tick. Returns False when idle."""
+        self._admit()
+        if all(r is None for r in self.active):
+            return False
+
+        tokens = np.zeros((self.max_batch,), np.int32)
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            if self.pending_tokens[slot]:
+                tokens[slot] = self.pending_tokens[slot].pop(0)
+            elif req.output:
+                tokens[slot] = req.output[-1]
+            else:
+                tokens[slot] = req.prompt[-1]
+
+        logits, self.caches = self._step(
+            self.params, self.caches, jnp.asarray(tokens), jnp.asarray(self.pos)
+        )
+        next_tok = np.asarray(jnp.argmax(logits, axis=-1))
+
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            self.pos[slot] += 1
+            if self.pending_tokens[slot]:
+                continue  # still prefilling this stream
+            req.output.append(int(next_tok[slot]))
+            hit_eos = req.eos_id is not None and req.output[-1] == req.eos_id
+            if hit_eos or len(req.output) >= req.max_new_tokens:
+                req.done = True
+                self.active[slot] = None  # retire; slot backfills next tick
+        return True
+
+    def run(self, max_ticks: int = 10_000) -> None:
+        for _ in range(max_ticks):
+            if not self.step() and not self.queue:
+                break

@@ -1,0 +1,23 @@
+"""Sharding: logical-axis rules engine + state/batch/cache sharding trees."""
+
+from repro.sharding.rules import TP_RULES, dp_axes, sharding_for, spec_for, with_zero
+from repro.sharding.specs import (
+    batch_shardings,
+    cache_shardings,
+    opt_state_shardings,
+    param_shardings,
+    replicated,
+)
+
+__all__ = [
+    "TP_RULES",
+    "spec_for",
+    "with_zero",
+    "sharding_for",
+    "dp_axes",
+    "param_shardings",
+    "opt_state_shardings",
+    "batch_shardings",
+    "cache_shardings",
+    "replicated",
+]

@@ -1,0 +1,147 @@
+"""Fault tolerance: straggler detection, failure handling, elastic rescale.
+
+Policy layer designed for 1000+ nodes; the mechanisms are real and unit
+tested in-process, with the multi-host transport (heartbeats over the
+coordination service) abstracted behind ``HostMonitor`` so a single-process
+simulation exercises the same code paths the launcher would use.
+
+Components:
+  * StragglerDetector — rolling-median step times; hosts slower than
+    k×median for m consecutive steps are flagged.
+  * HostMonitor — heartbeat registry; missed deadlines mark a host dead.
+  * ElasticPlan — given surviving hosts, recompute the data sharding
+    (hosts re-derive their slice from (step, host_index, num_hosts) — the
+    pipeline is stateless) and decide restore-from-checkpoint.
+  * run_with_recovery — drives a train loop with simulated failures:
+    on failure, restore latest checkpoint, re-plan, continue.
+"""
+
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+__all__ = ["StragglerDetector", "HostMonitor", "ElasticPlan", "run_with_recovery"]
+
+
+class StragglerDetector:
+    """Flags hosts whose step time exceeds ``threshold`` x rolling median for
+    ``patience`` consecutive steps."""
+
+    def __init__(self, threshold: float = 1.5, window: int = 16, patience: int = 3):
+        self.threshold = threshold
+        self.window = window
+        self.patience = patience
+        self._times: Dict[int, collections.deque] = {}
+        self._strikes: Dict[int, int] = collections.defaultdict(int)
+
+    def record(self, host: int, step_time: float):
+        self._times.setdefault(host, collections.deque(maxlen=self.window)).append(
+            step_time
+        )
+
+    def medians(self) -> Dict[int, float]:
+        return {h: float(np.median(t)) for h, t in self._times.items() if t}
+
+    def stragglers(self) -> List[int]:
+        meds = self.medians()
+        if len(meds) < 2:
+            return []
+        global_median = float(np.median(list(meds.values())))
+        out = []
+        for h, m in meds.items():
+            if m > self.threshold * global_median:
+                self._strikes[h] += 1
+            else:
+                self._strikes[h] = 0
+            if self._strikes[h] >= self.patience:
+                out.append(h)
+        return out
+
+
+class HostMonitor:
+    """Heartbeat registry. In production the heartbeats ride the coordination
+    service; here they are injected (simulation) through ``beat``."""
+
+    def __init__(self, hosts: Sequence[int], deadline_s: float = 60.0, clock=time.monotonic):
+        self.deadline_s = deadline_s
+        self.clock = clock
+        self.last_beat = {h: clock() for h in hosts}
+
+    def beat(self, host: int, at: Optional[float] = None):
+        self.last_beat[host] = self.clock() if at is None else at
+
+    def dead_hosts(self) -> List[int]:
+        now = self.clock()
+        return [h for h, t in self.last_beat.items() if now - t > self.deadline_s]
+
+    def alive(self) -> List[int]:
+        dead = set(self.dead_hosts())
+        return [h for h in self.last_beat if h not in dead]
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    """Resharding decision after membership change."""
+
+    hosts: List[int]
+    restore_step: Optional[int]
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self.hosts)
+
+    def host_index(self, host: int) -> int:
+        return self.hosts.index(host)
+
+
+def plan_elastic(
+    alive_hosts: Sequence[int],
+    latest_checkpoint: Optional[int],
+    min_hosts: int = 1,
+) -> ElasticPlan:
+    hosts = sorted(alive_hosts)
+    if len(hosts) < min_hosts:
+        raise RuntimeError(
+            f"only {len(hosts)} hosts alive, below minimum {min_hosts}"
+        )
+    return ElasticPlan(hosts=hosts, restore_step=latest_checkpoint)
+
+
+def run_with_recovery(
+    steps: int,
+    train_one: Callable[[int], float],
+    save: Callable[[int], None],
+    restore_latest: Callable[[], int],
+    checkpoint_every: int = 10,
+    failure_injector: Optional[Callable[[int], bool]] = None,
+    max_restarts: int = 10,
+):
+    """Drive a loop with checkpoint/restart semantics. ``train_one(step)``
+    returns the loss; ``failure_injector(step)`` returning True simulates a
+    node failure at that step. Returns (losses, restarts, steps_replayed)."""
+    losses: List[float] = []
+    restarts = 0
+    replayed = 0
+    step = 0
+    while step < steps:
+        try:
+            if failure_injector is not None and failure_injector(step):
+                raise RuntimeError(f"injected node failure at step {step}")
+            loss = train_one(step)
+            losses.append(loss)
+            if (step + 1) % checkpoint_every == 0:
+                save(step + 1)
+            step += 1
+        except RuntimeError:
+            restarts += 1
+            if restarts > max_restarts:
+                raise
+            resumed = restore_latest()
+            replayed += step - resumed
+            step = resumed
+    return losses, restarts, replayed

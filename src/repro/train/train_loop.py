@@ -1,0 +1,188 @@
+"""Distributed training step builder.
+
+Composes the model loss, gradient accumulation, ZeRO sharding constraints,
+and the compressed optimizer (the paper's technique) into one pjit-able
+``train_step(state, batch) -> (state, metrics)``.
+
+Distribution model (DESIGN.md §5):
+  * batch over pod×data; TP per the rules engine,
+  * gradients constrained to the ZeRO layout (forces reduce-scatter),
+  * optimizer states (packed 4-bit codes + scales) sharded over pod×data —
+    8x less state traffic than fp32 states, the paper's communication claim,
+  * updated params emitted with the TP-only layout (all-gather at the end).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.optimizers.base import Optimizer
+from repro.models import ModelConfig, loss_fn
+from repro.sharding import (
+    batch_shardings,
+    opt_state_shardings,
+    param_shardings,
+    replicated,
+)
+from repro.sharding.rules import spec_for, with_zero
+
+__all__ = ["TrainState", "build_train_step", "make_train_state", "train_state_shardings"]
+
+_IS_AXES_LEAF = lambda a: isinstance(a, tuple) and all(isinstance(s, str) for s in a)
+
+
+@jax.tree_util.register_pytree_node_class
+class TrainState:
+    """params (fp32 masters) + compressed optimizer state + step counter."""
+
+    def __init__(self, params, opt_state, step):
+        self.params = params
+        self.opt_state = opt_state
+        self.step = step
+
+    def tree_flatten(self):
+        return (self.params, self.opt_state, self.step), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+
+def make_train_state(params, optimizer: Optimizer) -> TrainState:
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+
+
+def train_state_shardings(state, axes, mesh: Mesh, zero: bool = True):
+    return TrainState(
+        params=param_shardings(state.params, axes, mesh, zero=zero),
+        opt_state=opt_state_shardings(state.opt_state, state.params, axes, mesh, zero=zero),
+        step=replicated(mesh),
+    )
+
+
+def _constrain_grads_zero(grads, params, axes, mesh: Mesh, grad_dtype=None):
+    """Force gradients into the ZeRO layout (reduce-scatter over dp).
+
+    ``grad_dtype=bf16`` is gradient compression: the cross-device reduction
+    moves bf16 instead of fp32 — half the gradient collective bytes (a
+    beyond-paper distributed-optimization lever, recorded in §Perf)."""
+    a_leaves = jax.tree_util.tree_leaves(axes, is_leaf=_IS_AXES_LEAF)
+    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
+    out = []
+    for g, a in zip(g_leaves, a_leaves):
+        if grad_dtype is not None:
+            g = g.astype(grad_dtype)
+        spec = with_zero(tuple(g.shape), spec_for(tuple(g.shape), a, mesh), mesh, axes=a)
+        out.append(jax.lax.with_sharding_constraint(g, NamedSharding(mesh, spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def build_train_step(
+    cfg: ModelConfig,
+    optimizer: Optimizer,
+    mesh: Optional[Mesh] = None,
+    axes=None,
+    *,
+    zero: bool = True,
+    accum_steps: int = 1,
+    grad_dtype=None,
+) -> Callable:
+    """Returns train_step(state, batch) -> (state, metrics).
+
+    ``accum_steps > 1`` splits the batch leading dim into microbatches and
+    accumulates gradients in fp32 (scan over microbatches — peak activation
+    memory drops by the accumulation factor)."""
+
+    def compute_grads(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        return loss, metrics, grads
+
+    def train_step(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        from repro.sharding.context import sharding_ctx
+        import contextlib
+
+        ctx = (
+            sharding_ctx(mesh, axes, zero=zero)
+            if mesh is not None
+            else contextlib.nullcontext()
+        )
+        with ctx:
+            return _train_step_inner(state, batch)
+
+    def _train_step_inner(state: TrainState, batch: Dict[str, jnp.ndarray]):
+        params = state.params
+
+        if accum_steps > 1:
+            def micro(b_all, i):
+                def slice_one(x):
+                    if x.ndim == 0:
+                        return x
+                    # mrope positions are (3, B, S): batch lives on dim 1
+                    bdim = 1 if (x.ndim >= 2 and x.shape[0] == 3 and x.shape[1] != 3) else 0
+                    size = x.shape[bdim] // accum_steps
+                    return jax.lax.dynamic_slice_in_dim(x, i * size, size, axis=bdim)
+
+                return jax.tree_util.tree_map(slice_one, b_all)
+
+            def body(carry, i):
+                g_acc, loss_acc = carry
+                loss, metrics, grads = compute_grads(params, micro(batch, i))
+                g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
+                return (g_acc, loss_acc + loss), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+            (grads, loss_sum), _ = jax.lax.scan(
+                body, (g0, jnp.float32(0)), jnp.arange(accum_steps)
+            )
+            grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
+            loss = loss_sum / accum_steps
+            metrics = {"ce_loss": loss, "aux_loss": jnp.float32(0)}
+        else:
+            loss, metrics, grads = compute_grads(params, batch)
+
+        if mesh is not None and zero and axes is not None:
+            grads = _constrain_grads_zero(grads, params, axes, mesh, grad_dtype)
+
+        new_params, new_opt = optimizer.update(grads, state.opt_state, params)
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        metrics["grad_norm"] = jnp.sqrt(
+            sum(
+                jnp.sum(g.astype(jnp.float32) ** 2)
+                for g in jax.tree_util.tree_leaves(grads)
+            )
+        )
+        return TrainState(new_params, new_opt, state.step + 1), metrics
+
+    return train_step
+
+
+def jit_train_step(
+    train_step: Callable,
+    state: TrainState,
+    batch,
+    axes,
+    mesh: Mesh,
+    *,
+    zero: bool = True,
+    donate: bool = True,
+):
+    """jit with explicit in/out shardings for the production mesh."""
+    state_sh = train_state_shardings(state, axes, mesh, zero=zero)
+    batch_sh = batch_shardings(batch, mesh)
+    metrics_sh = None  # replicated scalars — let jit infer
+    return jax.jit(
+        train_step,
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, metrics_sh),
+        donate_argnums=(0,) if donate else (),
+    )

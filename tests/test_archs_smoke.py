@@ -1,0 +1,88 @@
+"""Per-arch smoke tests: reduced config, one forward + 4-bit-AdamW train step
+on CPU, asserting output shapes and no NaNs (the deliverable-f requirement).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_config
+from repro.core.optimizers import adamw4bit
+from repro.models import decode_step, init_model, init_serve_cache, loss_fn
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 32
+
+
+def _batch(cfg, key):
+    ks = jax.random.split(key, 4)
+    batch = {
+        "tokens": jax.random.randint(ks[0], (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(ks[1], (B, S), 0, cfg.vocab_size),
+    }
+    if cfg.input_mode == "embeds":
+        batch["embeds"] = jax.random.normal(ks[2], (B, S, cfg.d_model)) * 0.02
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(ks[3], (B, S, cfg.d_model)) * 0.02
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS.keys()))
+def test_arch_smoke_train_step(arch):
+    cfg = reduced_config(arch)
+    params, axes = init_model(jax.random.PRNGKey(0), cfg)
+    # axes tree mirrors params tree
+    assert jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(lambda x: 0, params)
+    ) == jax.tree_util.tree_structure(
+        jax.tree_util.tree_map(
+            lambda a: 0, axes,
+            is_leaf=lambda a: isinstance(a, tuple) and all(isinstance(s, str) for s in a),
+        )
+    )
+
+    batch = _batch(cfg, jax.random.PRNGKey(1))
+    opt = adamw4bit(1e-3)
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch), has_aux=True
+        )(params)
+        params, state = opt.update(grads, state, params)
+        return params, state, loss
+
+    p1, s1, loss = step(params, state, batch)
+    assert np.isfinite(float(loss)), f"{arch}: loss not finite"
+    assert float(loss) > 0
+    # params actually moved
+    delta = sum(
+        float(jnp.sum(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32))))
+        for a, b in zip(jax.tree_util.tree_leaves(params), jax.tree_util.tree_leaves(p1))
+    )
+    assert delta > 0, f"{arch}: no parameter movement"
+    # second step continues from quantized state without NaN
+    p2, s2, loss2 = step(p1, s1, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS.keys()))
+def test_arch_smoke_decode_step(arch):
+    cfg = reduced_config(arch)
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    caches = init_serve_cache(cfg, B, s_max=256)
+    tokens = jax.random.randint(jax.random.PRNGKey(2), (B,), 0, cfg.vocab_size)
+    pos = jnp.zeros((B,), jnp.int32)
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = jax.random.normal(jax.random.PRNGKey(3), (B, 16, cfg.d_model)).astype(
+            jnp.bfloat16
+        )
+    logits, new_caches = jax.jit(
+        lambda p, c, t, q: decode_step(p, cfg, c, t, q, enc_out=enc_out)
+    )(params, caches, tokens, pos)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))

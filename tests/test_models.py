@@ -1,0 +1,257 @@
+"""Model correctness: attention/GLA vs naive oracles, decode==train parity."""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (
+    LayerSpec,
+    ModelConfig,
+    decode_step,
+    forward_hidden,
+    init_model,
+    init_serve_cache,
+    loss_fn,
+    plan_scan_units,
+)
+from repro.models.attention import train_attention
+from repro.models.gla import GLAState, gla_chunked, gla_decode_step
+from repro.models.layers import COMPUTE_DTYPE
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# chunked attention vs naive oracle
+# ---------------------------------------------------------------------------
+
+
+def naive_attention(q, k, v, causal, window, softcap_val):
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqhgd,bkhd->bqhgk", qg, k.astype(jnp.float32)) / math.sqrt(D)
+    if softcap_val > 0:
+        s = softcap_val * jnp.tanh(s / softcap_val)
+    qp = jnp.arange(Sq)[:, None]
+    kp = jnp.arange(k.shape[1])[None, :]
+    ok = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        ok &= kp <= qp
+    if window > 0:
+        ok &= kp > qp - window
+    s = jnp.where(ok[None, :, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bqhgk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(B, Sq, Hq, D)
+
+
+@pytest.mark.parametrize("causal,window,softcap_val", [
+    (True, 0, 0.0), (True, 7, 0.0), (True, 0, 30.0), (False, 0, 0.0),
+    (True, 64, 0.0),
+])
+def test_train_attention_matches_naive(causal, window, softcap_val):
+    B, S, Hq, Hkv, D = 2, 50, 4, 2, 16
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(B, S, Hq, D)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    v = jnp.asarray(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    got = train_attention(
+        q, k, v, causal=causal, window=window, softcap_val=softcap_val,
+        q_chunk=16, k_chunk=16,
+    )
+    want = naive_attention(q, k, v, causal, window, softcap_val)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked GLA vs naive recurrence
+# ---------------------------------------------------------------------------
+
+
+def naive_gla(q, k, v, log_a, normalize):
+    B, S, H, dk = q.shape
+    dv = v.shape[-1]
+    Smat = np.zeros((B, H, dk, dv))
+    n = np.zeros((B, H, dk))
+    ys = []
+    q, k, v, log_a = map(lambda x: np.asarray(x, np.float64), (q, k, v, log_a))
+    for t in range(S):
+        a = np.exp(log_a[:, t])[..., None]
+        Smat = a[..., None] * Smat + k[:, t][..., None] * v[:, t][..., None, :]
+        n = a * n + k[:, t]
+        y = np.einsum("bhk,bhkv->bhv", q[:, t], Smat)
+        if normalize:
+            d = np.abs(np.einsum("bhk,bhk->bh", q[:, t], n))
+            y = y / np.maximum(d, 1.0)[..., None]
+        ys.append(y)
+    return np.stack(ys, axis=1)
+
+
+@pytest.mark.parametrize("normalize", [True, False])
+@pytest.mark.parametrize("S,chunk", [(37, 8), (64, 16), (16, 16)])
+def test_gla_chunked_matches_naive(normalize, S, chunk):
+    B, H, dk, dv = 2, 3, 8, 8
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(B, S, H, dk)).astype(np.float32))
+    k = jnp.asarray(rng.normal(size=(B, S, H, dk)).astype(np.float32)) * 0.3
+    v = jnp.asarray(rng.normal(size=(B, S, H, dv)).astype(np.float32))
+    log_a = jnp.asarray(-np.abs(rng.normal(size=(B, S, H))).astype(np.float32) * 0.2)
+    got, st = gla_chunked(q, k, v, log_a, chunk=chunk, normalize=normalize)
+    want = naive_gla(q, k, v, log_a, normalize)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-4)
+
+
+def test_gla_decode_continues_chunked():
+    """Chunked prefill state feeds the single-step decode recurrence."""
+    B, S, H, dk, dv = 1, 24, 2, 8, 8
+    rng = np.random.default_rng(2)
+    mk = lambda *s: jnp.asarray(rng.normal(size=s).astype(np.float32)) * 0.5
+    q, k, v = mk(B, S, H, dk), mk(B, S, H, dk), mk(B, S, H, dv)
+    log_a = -jnp.abs(mk(B, S, H)) * 0.3
+    full, _ = gla_chunked(q, k, v, log_a, chunk=8)
+    half, st = gla_chunked(
+        q[:, :16], k[:, :16], v[:, :16], log_a[:, :16], chunk=8
+    )
+    ys = []
+    for t in range(16, S):
+        y, st = gla_decode_step(
+            q[:, t : t + 1], k[:, t : t + 1], v[:, t : t + 1],
+            log_a[:, t : t + 1], st,
+        )
+        ys.append(y)
+    got_tail = jnp.concatenate(ys, axis=1)
+    np.testing.assert_allclose(
+        np.asarray(got_tail), np.asarray(full[:, 16:]), rtol=2e-3, atol=2e-4
+    )
+
+
+# ---------------------------------------------------------------------------
+# decode parity: teacher-forced forward == token-by-token decode
+# ---------------------------------------------------------------------------
+
+
+def _full_logits(params, cfg, batch):
+    x, _ = forward_hidden(params, cfg, batch)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = jnp.einsum(
+        "bsd,dv->bsv", x.astype(COMPUTE_DTYPE), head.astype(COMPUTE_DTYPE)
+    ).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = cfg.final_softcap * jnp.tanh(logits / cfg.final_softcap)
+    return logits
+
+
+def _decode_all(params, cfg, tokens):
+    B, S = tokens.shape
+    caches = init_serve_cache(cfg, B, s_max=256)
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, caches = decode_step(params, cfg, caches, tokens[:, t], pos)
+        outs.append(logits)
+    return jnp.stack(outs, axis=1)  # (B, S, V)
+
+
+DECODE_CASES = {
+    "dense_gqa": dict(blocks=(LayerSpec("dense", 0),) * 2),
+    "swa": dict(blocks=(LayerSpec("dense", 8),) * 2),
+    "softcap_sandwich": dict(
+        blocks=(LayerSpec("dense", 8), LayerSpec("dense", 0)),
+        attn_softcap=30.0, final_softcap=20.0, sandwich_norm=True,
+    ),
+    "qk_norm": dict(blocks=(LayerSpec("dense", 0),) * 2, qk_norm=True),
+    "rope2d": dict(blocks=(LayerSpec("dense", 0),) * 2, rope_variant="rope2d"),
+    "moe": dict(
+        blocks=(LayerSpec("moe", 0),) * 2, num_experts=4, top_k=2,
+        moe_group_size=64,
+    ),
+    "xlstm": dict(
+        blocks=(LayerSpec("mlstm", 0), LayerSpec("slstm", 0)) * 1, gla_chunk=8,
+    ),
+    "hymba": dict(
+        blocks=(LayerSpec("hymba", 8),) * 2, ssm_state=4, gla_chunk=8,
+    ),
+}
+
+
+@pytest.mark.parametrize("case", list(DECODE_CASES.keys()))
+def test_decode_matches_teacher_forced(case):
+    kw = dict(DECODE_CASES[case])
+    blocks = kw.pop("blocks")
+    cfg = ModelConfig(
+        name=case, num_layers=len(blocks), d_model=32, num_heads=4,
+        num_kv_heads=2, head_dim=8, d_ff=64, vocab_size=128, blocks=blocks,
+        remat=False, **kw,
+    )
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 12
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0, 128)
+    full = _full_logits(params, cfg, {"tokens": tokens})
+    dec = _decode_all(params, cfg, tokens)
+    # MoE routing can differ marginally at capacity edges; others tight.
+    tol = 0.08 if case == "moe" else 0.02
+    diff = np.max(np.abs(np.asarray(full) - np.asarray(dec)))
+    assert diff < tol, f"{case}: max logit diff {diff}"
+
+
+def test_encdec_decode_parity():
+    cfg = ModelConfig(
+        name="whisper_tiny", num_layers=2, d_model=32, num_heads=4,
+        num_kv_heads=4, head_dim=8, d_ff=64, vocab_size=128,
+        blocks=(LayerSpec("dec", 0),) * 2,
+        encoder_blocks=(LayerSpec("enc", 0),) * 2,
+        family="encdec", norm_type="layernorm", rope_variant="none",
+        gated_mlp=False, tie_embeddings=True, remat=False,
+    )
+    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    B, S = 2, 10
+    frames = jax.random.normal(jax.random.PRNGKey(2), (B, 16, 32))
+    tokens = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0, 128)
+    full = _full_logits(params, cfg, {"tokens": tokens, "frames": frames})
+
+    # encoder once, then token-by-token decode
+    from repro.models.model import plan_scan_units, _run_units, _final_norm
+    from repro.models.layers import sinusoidal_positions
+
+    e = frames.astype(COMPUTE_DTYPE) + sinusoidal_positions(16, 32)[None].astype(COMPUTE_DTYPE)
+    e, _, _ = _run_units(cfg, plan_scan_units(cfg.encoder_blocks), params["encoder"], e, positions=None)
+    enc_out = _final_norm(cfg, e, params["enc_norm"])
+
+    caches = init_serve_cache(cfg, B, s_max=256)
+    outs = []
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits, caches = decode_step(params, cfg, caches, tokens[:, t], pos, enc_out=enc_out)
+        outs.append(logits)
+    dec = jnp.stack(outs, axis=1)
+    diff = np.max(np.abs(np.asarray(full) - np.asarray(dec)))
+    assert diff < 0.02, f"encdec: max logit diff {diff}"
+
+
+# ---------------------------------------------------------------------------
+# scan-unit planning
+# ---------------------------------------------------------------------------
+
+
+def test_plan_scan_units_periodic():
+    a, b = LayerSpec("dense", 8), LayerSpec("dense", 0)
+    units = plan_scan_units((a, b) * 13)
+    assert len(units) == 1 and units[0].repeat == 13 and units[0].pattern == (a, b)
+
+
+def test_plan_scan_units_runs():
+    g, s = LayerSpec("hymba", 0), LayerSpec("hymba", 8)
+    layout = (g,) + (s,) * 14 + (g,) + (s,) * 15 + (g,)
+    units = plan_scan_units(layout)
+    assert [u.repeat for u in units] == [1, 14, 1, 15, 1]
+
+
+def test_plan_scan_units_uniform():
+    d = LayerSpec("dense", 0)
+    units = plan_scan_units((d,) * 32)
+    assert len(units) == 1 and units[0].repeat == 32

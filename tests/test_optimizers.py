@@ -1,0 +1,230 @@
+"""Optimizer tests: exact math, convergence, zero-point reproduction, memory."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizers import (
+    FactoredMoment,
+    QuantPolicy,
+    adafactor,
+    adamw32,
+    adamw4bit,
+    adamw8bit,
+    factor4bit,
+    quantized_adamw,
+    sgdm,
+    sgdm4bit,
+    sm3,
+    state_nbytes,
+)
+from repro.core.quantizer import QuantConfig, QuantizedTensor
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(shape=(16, 512), seed=0):  # 8192 elements: above the 4096 threshold
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.1)}
+
+
+def _quadratic_loss(params, target):
+    return 0.5 * jnp.sum((params["w"] - target) ** 2)
+
+
+def _run_steps(opt, params, target, steps, key=None):
+    state = opt.init(params)
+    upd = jax.jit(opt.update)
+    losses = []
+    for t in range(steps):
+        loss, grads = jax.value_and_grad(_quadratic_loss)(params, target)
+        k = jax.random.fold_in(key, t) if key is not None else None
+        params, state = (upd(grads, state, params, key=k) if k is not None
+                         else upd(grads, state, params))
+        losses.append(float(loss))
+    return params, state, losses
+
+
+# ---------------------------------------------------------------------------
+# exact math: adamw32 equals a hand reference
+# ---------------------------------------------------------------------------
+
+
+def test_adamw32_matches_hand_reference():
+    lr, b1, b2, eps, wd = 1e-2, 0.9, 0.999, 1e-8, 0.01
+    p0 = np.asarray(_params()["w"], dtype=np.float64)
+    g_all = [
+        np.random.default_rng(i).normal(size=p0.shape).astype(np.float64)
+        for i in range(4)
+    ]
+
+    # numpy reference
+    p, m, v = p0.copy(), np.zeros_like(p0), np.zeros_like(p0)
+    for t, g in enumerate(g_all, start=1):
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mh, vh = m / (1 - b1**t), v / (1 - b2**t)
+        p = p - lr * (mh / (np.sqrt(vh) + eps) + wd * p)
+
+    opt = adamw32(lr, b1=b1, b2=b2, eps=eps, weight_decay=wd)
+    params = {"w": jnp.asarray(p0, jnp.float32)}
+    state = opt.init(params)
+    for g in g_all:
+        params, state = opt.update({"w": jnp.asarray(g, jnp.float32)}, state, params)
+    np.testing.assert_allclose(np.asarray(params["w"]), p, rtol=2e-5, atol=2e-6)
+
+
+# ---------------------------------------------------------------------------
+# state representation & memory accounting (Tab. 4/5 claims)
+# ---------------------------------------------------------------------------
+
+
+def test_4bit_states_are_quantized_and_small():
+    params = _params((64, 1024))  # 65536 elements > threshold
+    opt4 = adamw4bit(1e-3)
+    opt32 = adamw32(1e-3)
+    s4, s32 = opt4.init(params), opt32.init(params)
+    assert isinstance(s4["m"]["w"], QuantizedTensor)
+    assert isinstance(s4["v"]["w"], QuantizedTensor)
+    b4, b32 = state_nbytes(s4), state_nbytes(s32)
+    # ~8x smaller modulo scale overhead (m: 0.5B + B128 scales; v: 0.5B + rank1)
+    assert b4 < b32 / 6.5
+    # 8-bit in between
+    b8 = state_nbytes(adamw8bit(1e-3, exclude_embeddings=False).init(params))
+    assert b4 < b8 < b32
+
+
+def test_threshold_rule_keeps_small_tensors_fp32():
+    params = {"bias": jnp.zeros((4096,)), "big": jnp.zeros((4097,))}
+    s = adamw4bit(1e-3).init(params)
+    assert not isinstance(s["m"]["bias"], QuantizedTensor)  # <= 4096 stays fp32
+    assert isinstance(s["m"]["big"], QuantizedTensor)
+
+
+def test_8bit_embedding_exclusion():
+    params = {"embed_tokens": jnp.zeros((100, 128)), "dense": jnp.zeros((100, 128))}
+    s = adamw8bit(1e-3).init(params)
+    assert not isinstance(s["m"]["embed_tokens"], QuantizedTensor)
+    assert isinstance(s["m"]["dense"], QuantizedTensor)
+
+
+def test_factor4bit_state_structure():
+    params = {"w2d": jnp.zeros((64, 1024)), "w1d": jnp.zeros((8192,))}
+    s = factor4bit(1e-3).init(params)
+    assert isinstance(s["v"]["w2d"], FactoredMoment)  # ndim>=2 factored
+    assert isinstance(s["v"]["w1d"], QuantizedTensor)  # 1-d quantized
+    assert isinstance(s["m"]["w2d"], QuantizedTensor)  # m always quantized
+    # factored v is sublinear: (64+1024)*4 bytes << 64*1024/2
+    assert s["v"]["w2d"].nbytes() == (64 + 1024) * 4
+
+
+# ---------------------------------------------------------------------------
+# convergence: 4-bit optimizers track 32-bit on a quadratic
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "factory", [adamw4bit, factor4bit, adamw8bit], ids=["4bit", "factor", "8bit"]
+)
+def test_lowbit_matches_fp32_convergence(factory):
+    params = _params((16, 512), seed=1)
+    target = jnp.ones_like(params["w"]) * 0.5
+    steps = 250  # 4-bit v-overestimation damps the effective step ~4x;
+    # convergence is retained, just needs the step budget (paper trains long).
+    _, _, base = _run_steps(adamw32(2e-2), params, target, steps)
+    _, _, low = _run_steps(factory(2e-2), params, target, steps)
+    assert low[-1] < 0.02 * low[0]
+    assert np.isfinite(low).all()
+
+
+def test_zero_point_problem_destabilizes_updates():
+    """Tab. 1 / Fig. 3 reproduction: quantizing the 2nd moment with a mapping
+    that CONTAINS zero (DE) collapses small v entries to 0, so the next-step
+    update m̂/(√v̂+ε) explodes by ~1/ε at those coordinates. Zero-excluding
+    mappings (DE-0, Linear) keep updates bounded. We measure max |Δw| over a
+    few steps against the fp32 trajectory — the paper's 'Unstable(%)' column
+    made mechanical."""
+    rng = np.random.default_rng(3)
+    shape = (32, 1024)
+    params = {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32))}
+    # row-structured gradient magnitudes (the App. B outlier pattern)
+    rowscale = 10.0 ** rng.uniform(-2, 0, size=(shape[0], 1)).astype(np.float32)
+    g = jnp.asarray(rng.normal(size=shape).astype(np.float32) * rowscale)
+    target = params["w"] - g  # so grad == g at step 1
+
+    def max_delta(opt):
+        p, _, _ = _run_steps(opt, params, target, 8)
+        return float(jnp.max(jnp.abs(p["w"] - params["w"])))
+
+    d32 = max_delta(adamw32(1e-3))
+
+    def v_opt(mapping):
+        v_cfg = QuantConfig(
+            bits=4, normalization="blockwise", block_size=128, mapping=mapping,
+            signed=False,
+        )
+        return quantized_adamw(
+            1e-3,
+            m_policy=QuantPolicy(config=None),
+            v_policy=QuantPolicy(config=v_cfg),
+        )
+
+    d_de = max_delta(v_opt("de"))
+    d_de0 = max_delta(v_opt("de0"))
+    d_lin = max_delta(v_opt("linear"))
+    # DE (zero point) explodes; DE-0 and Linear stay bounded near fp32.
+    assert d_de > 50 * d32
+    assert d_de0 < 3 * d32
+    assert d_lin < 3 * d32
+
+
+# ---------------------------------------------------------------------------
+# baselines run and converge
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize(
+    "opt",
+    [
+        adafactor(2e-2, b1=0.9),
+        adafactor(2e-2, b1=0.0),
+        sm3(2e-1),
+        sgdm(1e-2),
+    ],
+    ids=["adafactor", "adafactor_b1_0", "sm3", "sgdm"],
+)
+def test_baselines_converge(opt):
+    params = _params((16, 512), seed=2)
+    target = jnp.zeros_like(params["w"])
+    _, _, losses = _run_steps(opt, params, target, 80)
+    assert losses[-1] < 0.1 * losses[0]
+    assert np.isfinite(losses).all()
+
+
+def test_sgdm4bit_converges_with_sr():
+    params = _params((16, 512), seed=4)
+    target = jnp.zeros_like(params["w"])
+    key = jax.random.PRNGKey(0)
+    _, state, losses = _run_steps(sgdm4bit(5e-3), params, target, 80, key=key)
+    assert isinstance(state["m"]["w"], QuantizedTensor)
+    assert losses[-1] < 0.2 * losses[0]
+
+
+# ---------------------------------------------------------------------------
+# jit-compatibility: whole update under jax.jit
+# ---------------------------------------------------------------------------
+
+
+def test_update_jits_and_matches_eager():
+    params = _params((16, 512), seed=5)
+    opt = adamw4bit(1e-3)
+    state = opt.init(params)
+    g = {"w": jnp.ones_like(params["w"]) * 0.01}
+
+    p_e, s_e = opt.update(g, state, params)
+    p_j, s_j = jax.jit(opt.update)(g, state, params)
+    np.testing.assert_allclose(np.asarray(p_e["w"]), np.asarray(p_j["w"]), rtol=1e-4, atol=1e-6)
+    np.testing.assert_array_equal(
+        np.asarray(s_e["m"]["w"].codes), np.asarray(s_j["m"]["w"].codes)
+    )

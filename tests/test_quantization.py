@@ -1,0 +1,215 @@
+"""Unit + property tests for the quantization core (mappings/norms/packing)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mappings, normalization, packing
+from repro.core.quantizer import (
+    B128_DE,
+    B2048_DE,
+    RANK1_LINEAR,
+    QuantConfig,
+    dequantize,
+    quantize,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# mapping tables (paper App. E.2 ground truth)
+# ---------------------------------------------------------------------------
+
+
+def test_linear_unsigned_excludes_zero_and_matches_paper():
+    t = np.asarray(mappings.mapping_table("linear", 4, signed=False))
+    assert t.shape == (16,)
+    assert t.min() == pytest.approx(0.0625)  # paper: smallest Linear value
+    assert t.max() == 1.0
+    assert 0.0 not in t
+    np.testing.assert_allclose(t, (np.arange(16) + 1) / 16, rtol=1e-6)
+
+
+def test_de_unsigned_corner_cases():
+    t = np.asarray(mappings.mapping_table("de", 4, signed=False))
+    assert t.shape == (16,)
+    assert t[0] == 0.0 and t[-1] == 1.0
+    # paper: smallest representable DE-0 value is 0.0033
+    assert t[1] == pytest.approx(0.00325, abs=1e-6)
+
+
+def test_de0_drops_zero_only():
+    de = np.asarray(mappings.mapping_table("de", 4, signed=False))
+    de0 = np.asarray(mappings.mapping_table("de0", 4, signed=False))
+    assert de0.shape == (15,)
+    np.testing.assert_allclose(de0, de[de != 0.0])
+
+
+def test_de_signed_asymmetric():
+    t = np.asarray(mappings.mapping_table("de", 4, signed=True))
+    assert t.shape == (16,)
+    assert 1.0 in t and -1.0 not in t  # App. E.2: -1 is not defined
+    assert 0.0 in t
+
+
+@pytest.mark.parametrize("kind", ["linear", "de", "de0"])
+@pytest.mark.parametrize("signed", [False, True])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_tables_sorted_unique_bounded(kind, signed, bits):
+    t = np.asarray(mappings.mapping_table(kind, bits, signed))
+    assert len(t) <= 2**bits
+    assert (np.diff(t) > 0).all()
+    assert t.max() <= 1.0 and t.min() >= (-1.0 if signed else 0.0)
+
+
+def test_encode_is_round_to_nearest():
+    t = mappings.mapping_table("de", 4, signed=True)
+    n = jnp.linspace(-1, 1, 513)
+    idx = mappings.encode(n, t)
+    dec = mappings.decode(idx, t)
+    # brute-force argmin oracle
+    brute = jnp.argmin(jnp.abs(n[:, None] - t[None, :]), axis=1)
+    np.testing.assert_allclose(
+        np.abs(np.asarray(dec - n)),
+        np.abs(np.asarray(jnp.take(t, brute) - n)),
+        atol=1e-7,
+    )
+
+
+def test_stochastic_rounding_unbiased():
+    t = mappings.mapping_table("linear", 4, signed=False)
+    n = jnp.full((20000,), 0.7)  # between 0.6875 and 0.75
+    key = jax.random.PRNGKey(0)
+    codes = mappings.encode_stochastic(n, t, key)
+    mean = float(jnp.mean(mappings.decode(codes, t)))
+    assert abs(mean - 0.7) < 2e-3  # unbiased in expectation (Assumption 4)
+
+
+# ---------------------------------------------------------------------------
+# normalization
+# ---------------------------------------------------------------------------
+
+
+def test_blockwise_normalize_unit_interval():
+    x = jnp.asarray(np.random.default_rng(0).normal(size=300).astype(np.float32))
+    n, s = normalization.blockwise_normalize(x, 128)
+    assert s.shape == (3,)  # ceil(300/128)
+    assert float(jnp.max(jnp.abs(n))) <= 1.0 + 1e-6
+    back = n * normalization.blockwise_denorm(s, x.shape, 128)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), rtol=1e-6)
+
+
+def test_rank1_tighter_than_pertensor():
+    # Outliers confined to one row: every column max hits the outlier, but the
+    # row maxes of the other rows stay small, so min(r_i, c_j) rescues the
+    # interior (paper Sec. 4.2 — works whichever single dim carries outliers).
+    rng = np.random.default_rng(1)
+    x = np.abs(rng.normal(size=(32, 48)).astype(np.float32)) * 0.01
+    x[3, :] += 10.0
+    n_r1, stats = normalization.rank1_normalize(jnp.asarray(x))
+    n_pt, _ = normalization.pertensor_normalize(jnp.asarray(x))
+    # interior elements are scaled by ~their own magnitude scale, not by the
+    # global outlier: normalized values should be much larger (less crushed)
+    interior = np.ones_like(x, dtype=bool)
+    interior[3, :] = False
+    assert float(jnp.mean(n_r1[interior])) > 5 * float(jnp.mean(n_pt[interior]))
+    # exact reconstruction via denorm
+    back = n_r1 * normalization.rank1_denorm(stats, x.shape)
+    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-5)
+
+
+def test_rank1_3d_generalization():
+    x = jnp.asarray(
+        np.abs(np.random.default_rng(2).normal(size=(4, 8, 16))).astype(np.float32)
+    )
+    n, stats = normalization.rank1_normalize(x)
+    assert len(stats) == 3
+    assert stats[0].shape == (4,) and stats[1].shape == (8,) and stats[2].shape == (16,)
+    assert float(jnp.max(n)) <= 1.0 + 1e-6
+
+
+def test_all_zero_tensor_is_safe():
+    x = jnp.zeros((16, 16))
+    for cfg in (B128_DE, RANK1_LINEAR):
+        xd = dequantize(quantize(x, cfg))
+        assert bool(jnp.all(jnp.isfinite(xd)))
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(min_value=1, max_value=513), st.integers(min_value=1, max_value=5))
+@settings(max_examples=30, deadline=None)
+def test_pack_unpack_roundtrip(last, rows):
+    rng = np.random.default_rng(last * 7 + rows)
+    codes = jnp.asarray(rng.integers(0, 16, size=(rows, last), dtype=np.uint8))
+    packed = packing.pack4(codes)
+    assert packed.shape == (rows, packing.packed_last_dim(last))
+    out = packing.unpack4(packed, last)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# quantizer round-trip properties (hypothesis)
+# ---------------------------------------------------------------------------
+
+
+@st.composite
+def tensors(draw):
+    rows = draw(st.integers(min_value=1, max_value=40))
+    cols = draw(st.integers(min_value=1, max_value=300))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    scale = draw(st.sampled_from([1e-8, 1e-3, 1.0, 1e4]))
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.normal(size=(rows, cols)).astype(np.float32) * scale)
+
+
+@given(tensors())
+@settings(max_examples=25, deadline=None)
+def test_quantize_dequantize_bounded_error_signed(x):
+    """Dequantized values stay within one scale unit of the original and the
+    error is bounded by the coarsest table gap times the local scale."""
+    q = quantize(x, B128_DE)
+    xd = dequantize(q)
+    scale = normalization.blockwise_denorm(q.scales[0], x.shape, 128)
+    # max relative-to-scale error bounded by half the largest table gap
+    table = np.asarray(B128_DE.table())
+    max_gap = np.max(np.diff(table))
+    err = np.asarray(jnp.abs(xd - x) / scale)
+    assert err.max() <= max_gap / 2 + 1e-5
+
+
+@given(tensors())
+@settings(max_examples=25, deadline=None)
+def test_second_moment_never_zero(x):
+    """Rank-1/Linear (paper's 2nd-moment quantizer) never emits exact zeros
+    for a positive tensor — the zero-point problem fix."""
+    v = jnp.abs(x) + 1e-30
+    q = quantize(v, RANK1_LINEAR)
+    vd = dequantize(q)
+    assert float(jnp.min(vd)) > 0.0
+
+
+def test_quantized_bytes_accounting():
+    x = jnp.zeros((1024, 1024))
+    q4 = quantize(x, B128_DE)
+    # 4-bit codes: n/2 bytes; scales: n/128 fp32
+    assert q4.nbytes() == 1024 * 1024 // 2 + 1024 * 1024 // 128 * 4
+    q8 = quantize(x, B2048_DE._replace_bits(8) if hasattr(B2048_DE, "_replace_bits") else QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de"))
+    assert q8.nbytes() == 1024 * 1024 + 1024 * 1024 // 2048 * 4
+
+
+def test_dequantize_under_jit_and_grad_free():
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(8, 256)).astype(np.float32))
+    q = quantize(x, B128_DE)
+
+    @jax.jit
+    def f(qt):
+        return jnp.sum(dequantize(qt))
+
+    assert np.isfinite(float(f(q)))
