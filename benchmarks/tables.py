@@ -15,15 +15,8 @@ import numpy as np
 from benchmarks.common import BENCH_CFG, emit, train_small_lm
 from repro.core.optimizers import (
     QuantPolicy,
-    adafactor,
-    adamw32,
-    adamw4bit,
-    adamw8bit,
-    factor4bit,
+    make_optimizer,
     quantized_adamw,
-    sgdm,
-    sgdm4bit,
-    sm3,
     state_nbytes,
 )
 from repro.core.optimizers.adamw import M_4BIT
@@ -72,13 +65,13 @@ def tab1_second_moment_ablation() -> List[Tuple[str, float, str]]:
 def tab2_optimizer_comparison() -> List[Tuple[str, float, str]]:
     """Tab. 2: full-precision vs memory-efficient optimizers."""
     opts = [
-        ("32bit-AdamW", adamw32(LR)),
-        ("Adafactor", adafactor(LR, b1=0.9)),
-        ("Adafactor-b1=0", adafactor(LR, b1=0.0)),
-        ("SM3", sm3(LR)),
-        ("8bit-AdamW", adamw8bit(LR, exclude_embeddings=True)),
-        ("4bit-AdamW", adamw4bit(LR)),
-        ("4bit-Factor", factor4bit(LR)),
+        ("32bit-AdamW", make_optimizer("adamw32", LR)),
+        ("Adafactor", make_optimizer("adafactor", LR, b1=0.9)),
+        ("Adafactor-b1=0", make_optimizer("adafactor", LR, b1=0.0)),
+        ("SM3", make_optimizer("sm3", LR)),
+        ("8bit-AdamW", make_optimizer("adamw8bit", LR, exclude_embeddings=True)),
+        ("4bit-AdamW", make_optimizer("adamw4bit", LR)),
+        ("4bit-Factor", make_optimizer("factor4bit", LR)),
     ]
     rows = []
     base = None
@@ -120,12 +113,12 @@ def tab4_memory() -> List[Tuple[str, float, str]]:
         int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params_s)
     )
     opts = [
-        ("32bit-AdamW", adamw32(LR)),
-        ("8bit-AdamW", adamw8bit(LR)),
-        ("4bit-AdamW", adamw4bit(LR)),
-        ("4bit-Factor", factor4bit(LR)),
-        ("Adafactor-b1=0", adafactor(LR, b1=0.0)),
-        ("SM3", sm3(LR)),
+        ("32bit-AdamW", make_optimizer("adamw32", LR)),
+        ("8bit-AdamW", make_optimizer("adamw8bit", LR)),
+        ("4bit-AdamW", make_optimizer("adamw4bit", LR)),
+        ("4bit-Factor", make_optimizer("factor4bit", LR)),
+        ("Adafactor-b1=0", make_optimizer("adafactor", LR, b1=0.0)),
+        ("SM3", make_optimizer("sm3", LR)),
     ]
     rows = []
     base = None
@@ -239,8 +232,8 @@ def thm1_sgdm_convergence() -> List[Tuple[str, float, str]]:
             p, state = (upd(g, state, p, key=k) if k is not None else upd(g, state, p))
         return float(jnp.mean((p["w"] - target) ** 2))
 
-    e32 = run(sgdm(5e-2))
-    e4 = run(sgdm4bit(5e-2), key=jax.random.PRNGKey(0))
+    e32 = run(make_optimizer("sgdm", 5e-2))
+    e4 = run(make_optimizer("sgdm4bit", 5e-2), key=jax.random.PRNGKey(0))
     return [
         ("thm1/sgdm32", 0.0, f"final_mse={e32:.6f}"),
         ("thm1/sgdm4bit_sr", 0.0,

@@ -2,25 +2,45 @@
 moment with a zero-containing mapping destabilizes training; zero-excluding
 mappings fix it (Tab. 1 / Fig. 3 in miniature).
 
+Written against the composable transform API: the ablation swaps ONE piece
+of the chain (the second-moment ``QuantPolicy`` handed to ``compressed``)
+while the update rule, weight decay, and schedule stay fixed.
+
     PYTHONPATH=src python examples/ablation_zero_point.py
 """
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 import jax
 
 from benchmarks.common import train_small_lm
-from repro.core.optimizers import QuantPolicy, quantized_adamw
+from repro.core.optimizers import (
+    QuantPolicy,
+    add_decayed_weights,
+    chain,
+    compressed,
+    scale_by_adam,
+    scale_by_learning_rate,
+)
 from repro.core.optimizers.adamw import M_4BIT
 from repro.core.quantizer import QuantConfig
 
 for mapping in ("de", "de0", "linear"):
     v_cfg = QuantConfig(bits=4, normalization="blockwise", block_size=128,
                         mapping=mapping, signed=False)
-    opt = quantized_adamw(
-        3e-3,
-        m_policy=QuantPolicy(config=M_4BIT, threshold=0),
-        v_policy=QuantPolicy(config=v_cfg, threshold=0),
+    tx = chain(
+        compressed(
+            scale_by_adam(),
+            {"m": QuantPolicy(config=M_4BIT, threshold=0),
+             "v": QuantPolicy(config=v_cfg, threshold=0)},
+        ),
+        add_decayed_weights(0.01),
+        scale_by_learning_rate(3e-3),
     )
-    r = train_small_lm(opt, steps=120)
+    r = train_small_lm(tx, steps=120)
     tag = "zero in map" if mapping == "de" else "zero excluded"
     print(f"2nd moment 4-bit {mapping:6s} ({tag}): final_loss={r['loss_final']:.4f} "
           f"max|dW|={r['max_param_delta']:.3f} unstable={bool(r['unstable'])}")

@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import reduced_config
-from repro.core.optimizers import adamw32, adamw4bit, state_nbytes
+from repro.core.optimizers import make_optimizer, state_nbytes
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import init_model
 from repro.train.train_loop import build_train_step, make_train_state
@@ -28,8 +28,8 @@ def train(optimizer, steps=40):
 
 
 def main():
-    for name, opt in (("32-bit AdamW", adamw32(3e-3)),
-                      ("4-bit AdamW (paper)", adamw4bit(3e-3))):
+    for name, opt in (("32-bit AdamW", make_optimizer("adamw32", 3e-3)),
+                      ("4-bit AdamW (paper)", make_optimizer("adamw4bit", 3e-3))):
         print(f"== {name} ==")
         state = train(opt)
         print(f"  optimizer-state bytes: {state_nbytes(state.opt_state):,}")

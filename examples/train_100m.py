@@ -13,7 +13,7 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core.optimizers import adamw4bit, linear_warmup_linear_decay, state_nbytes
+from repro.core.optimizers import linear_warmup_linear_decay, make_optimizer, state_nbytes
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import LayerSpec, ModelConfig, init_model
 from repro.train.checkpoint import CheckpointManager, latest_step
@@ -38,7 +38,7 @@ def main():
     n_params = sum(int(p.size) for p in jax.tree_util.tree_leaves(params))
     print(f"model: {n_params/1e6:.1f}M params")
 
-    opt = adamw4bit(linear_warmup_linear_decay(3e-4, 20, args.steps))
+    opt = make_optimizer("adamw4bit", linear_warmup_linear_decay(3e-4, 20, args.steps))
     state = make_train_state(params, opt)
     print(f"4-bit optimizer state: {state_nbytes(state.opt_state)/1e6:.1f} MB "
           f"(fp32 would be {n_params*8/1e6:.1f} MB)")

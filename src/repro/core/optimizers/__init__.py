@@ -1,4 +1,17 @@
-"""Optimizer zoo: the paper's 4-bit optimizers plus every compared baseline."""
+"""Optimizer zoo: the paper's 4-bit optimizers plus every compared baseline.
+
+The zoo is built on the composable transform API in
+``repro.core.optimizers.transform`` (``chain`` / ``compressed`` /
+``partition``); the paper-named constructors are thin chains, and
+``make_optimizer(name, lr, **overrides)`` is the structured factory used by
+CLIs and benchmarks (overrides are validated against each constructor's
+signature).
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Dict, NamedTuple, Tuple
 
 from repro.core.optimizers.adafactor import adafactor
 from repro.core.optimizers.adamw import (
@@ -25,23 +38,123 @@ from repro.core.optimizers.schedule import (
 )
 from repro.core.optimizers.sgdm import sgdm, sgdm4bit
 from repro.core.optimizers.sm3 import sm3
+from repro.core.optimizers.transform import (
+    GradientTransformation,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    compressed,
+    label_by_regex,
+    partition,
+    scale_by_adam,
+    scale_by_factored_rms,
+    scale_by_learning_rate,
+    scale_by_sm3,
+    trace,
+)
 
-OPTIMIZER_REGISTRY = {
-    "adamw32": adamw32,
-    "adamw8bit": adamw8bit,
-    "adamw4bit": adamw4bit,
-    "factor4bit": factor4bit,
-    "adafactor": adafactor,
-    "sm3": sm3,
-    "sgdm": sgdm,
-    "sgdm4bit": sgdm4bit,
+
+class OptimizerSpec(NamedTuple):
+    """Registry entry: the chain-building factory plus its doc line.
+
+    ``forwards_to`` names the constructor a factory's ``**kw`` is handed to,
+    so override validation checks the real target's signature.
+    """
+
+    factory: Callable[..., Optimizer]
+    description: str
+    forwards_to: Callable[..., Optimizer] = None
+
+
+OPTIMIZER_SPECS: Dict[str, OptimizerSpec] = {
+    "adamw32": OptimizerSpec(
+        adamw32, "32-bit AdamW (no compression)", quantized_adamw
+    ),
+    "adamw8bit": OptimizerSpec(
+        adamw8bit, "8-bit AdamW baseline, B2048/DE, embeddings fp32", quantized_adamw
+    ),
+    "adamw4bit": OptimizerSpec(
+        adamw4bit, "paper's 4-bit AdamW: m B128/DE, v Rank-1/Linear", quantized_adamw
+    ),
+    "factor4bit": OptimizerSpec(
+        factor4bit, "paper's 4-bit Factor: m B128/DE, v factored for ndim>=2",
+        quantized_adamw,
+    ),
+    "adafactor": OptimizerSpec(adafactor, "Adafactor baseline (factored v)"),
+    "sm3": OptimizerSpec(sm3, "SM3 baseline (sublinear accumulators)"),
+    "sgdm": OptimizerSpec(sgdm, "SGD with momentum (Alg. 2 accumulator form)"),
+    "sgdm4bit": OptimizerSpec(
+        sgdm4bit, "4-bit SGDM with stochastic rounding", sgdm
+    ),
 }
 
+
+def optimizer_names() -> Tuple[str, ...]:
+    return tuple(OPTIMIZER_SPECS)
+
+
+def make_optimizer(name: str, lr, **overrides) -> Optimizer:
+    """Build a registered optimizer with validated keyword overrides.
+
+    Raises ``ValueError`` for an unknown name or an override the named
+    constructor does not accept (listing the valid choices), so CLI typos
+    fail loudly instead of silently training the wrong configuration.
+    """
+    spec = OPTIMIZER_SPECS.get(name)
+    if spec is None:
+        raise ValueError(
+            f"unknown optimizer {name!r}; available: {', '.join(OPTIMIZER_SPECS)}"
+        )
+    valid = set()
+    fn = spec.factory
+    while fn is not None:  # follow the **kw forwarding chain
+        sig = inspect.signature(fn)
+        valid |= {
+            p.name
+            for p in sig.parameters.values()
+            if p.kind in (inspect.Parameter.POSITIONAL_OR_KEYWORD, inspect.Parameter.KEYWORD_ONLY)
+            and p.name != "lr"
+        }
+        has_var_kw = any(
+            p.kind is inspect.Parameter.VAR_KEYWORD for p in sig.parameters.values()
+        )
+        next_fn = spec.forwards_to if fn is spec.factory else None
+        fn = next_fn if has_var_kw else None
+    unknown = set(overrides) - valid
+    if unknown:
+        raise ValueError(
+            f"optimizer {name!r} does not accept override(s) "
+            f"{sorted(unknown)}; valid overrides: {sorted(valid)}"
+        )
+    try:
+        return spec.factory(lr, **overrides)
+    except TypeError as e:
+        # e.g. a forwarded param the wrapper hard-binds ("multiple values")
+        raise ValueError(
+            f"optimizer {name!r} rejected overrides: {e}"
+        ) from None
+
+
 __all__ = [
+    # facade + policies
     "Optimizer",
     "QuantPolicy",
     "FactoredMoment",
     "state_nbytes",
+    # transform API
+    "GradientTransformation",
+    "chain",
+    "compressed",
+    "partition",
+    "label_by_regex",
+    "as_optimizer",
+    "scale_by_adam",
+    "trace",
+    "scale_by_sm3",
+    "scale_by_factored_rms",
+    "add_decayed_weights",
+    "scale_by_learning_rate",
+    # paper-named constructors
     "quantized_adamw",
     "adamw32",
     "adamw8bit",
@@ -51,10 +164,16 @@ __all__ = [
     "sm3",
     "sgdm",
     "sgdm4bit",
+    # schedules
     "constant",
     "linear_warmup_linear_decay",
     "linear_warmup_cosine",
-    "OPTIMIZER_REGISTRY",
+    # factory
+    "OptimizerSpec",
+    "OPTIMIZER_SPECS",
+    "make_optimizer",
+    "optimizer_names",
+    # quantizer presets
     "M_4BIT",
     "V_4BIT",
     "M_8BIT",

@@ -4,21 +4,23 @@ Factored second moment over the trailing two dims for ndim>=2 tensors, full
 fp32 second moment for 1-d. The paper compares both the β1>0 configuration
 (same β1 as AdamW) and β1=0 (no first moment, most memory-efficient). We keep
 the paper's comparison protocol: AdamW hyperparameters carried over, RMS
-update clipping d=1.0 from the Adafactor paper.
+update clipping d=1.0 from the Adafactor paper.  The update rule lives in
+``transform.scale_by_factored_rms``; this module is the paper-named chain.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Union
-
-import jax
-import jax.numpy as jnp
-
-from repro.core.optimizers.base import FactoredMoment, Optimizer
+from repro.core.optimizers.base import Optimizer
+from repro.core.optimizers.transform import (
+    Schedule,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    scale_by_factored_rms,
+    scale_by_learning_rate,
+)
 
 __all__ = ["adafactor"]
-
-Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
 
 
 def adafactor(
@@ -29,68 +31,9 @@ def adafactor(
     clip_threshold: float = 1.0,
     weight_decay: float = 0.01,
 ) -> Optimizer:
-    def init(params):
-        def init_v(p):
-            if p.ndim >= 2:
-                return FactoredMoment.zeros(p.shape)
-            return jnp.zeros(p.shape, jnp.float32)
-
-        state = {
-            "v": jax.tree_util.tree_map(init_v, params),
-            "step": jnp.zeros((), jnp.int32),
-        }
-        if b1 > 0:
-            state["m"] = jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
-            )
-        return state
-
-    def update(grads, state, params, key=None):
-        del key
-        step = state["step"] + 1
-        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
-        bc2 = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
-
-        is_leaf = lambda x: isinstance(x, FactoredMoment)
-        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
-        leaves_p = treedef.flatten_up_to(params)
-        leaves_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_leaf)[0]
-        leaves_m = (
-            jax.tree_util.tree_flatten(state["m"])[0]
-            if b1 > 0
-            else [None] * len(leaves_g)
-        )
-
-        new_p, new_v, new_m = [], [], []
-        for g, p, v_s, m in zip(leaves_g, leaves_p, leaves_v, leaves_m):
-            g = g.astype(jnp.float32)
-            sq = g * g + eps
-            if isinstance(v_s, FactoredMoment):
-                v2 = v_s.ema_update(sq, b2)
-                v_hat = v2.reconstruct() / bc2
-            else:
-                v2 = b2 * v_s + (1 - b2) * sq
-                v_hat = v2 / bc2
-            u = g / jnp.sqrt(jnp.maximum(v_hat, eps))
-            # Adafactor update clipping: divide by max(1, RMS(u)/d).
-            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
-            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
-            if m is not None:
-                m2 = b1 * m + (1 - b1) * u
-                new_m.append(m2)
-                u = m2
-            p2 = (p.astype(jnp.float32) - lr_t * (u + weight_decay * p)).astype(
-                p.dtype
-            )
-            new_p.append(p2)
-            new_v.append(v2)
-
-        out_state = {
-            "v": jax.tree_util.tree_unflatten(treedef, new_v),
-            "step": step,
-        }
-        if b1 > 0:
-            out_state["m"] = jax.tree_util.tree_unflatten(treedef, new_m)
-        return jax.tree_util.tree_unflatten(treedef, new_p), out_state
-
-    return Optimizer(init=init, update=update, name=f"adafactor(b1={b1})")
+    tx = chain(
+        scale_by_factored_rms(b1=b1, b2=b2, eps=eps, clip_threshold=clip_threshold),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(lr),
+    )
+    return as_optimizer(tx, name=f"adafactor(b1={b1})")

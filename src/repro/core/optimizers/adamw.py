@@ -1,6 +1,6 @@
-"""AdamW with compressed optimizer states (paper Alg. 3).
+"""AdamW family as transformation chains (paper Alg. 3).
 
-One factory covers the paper's whole AdamW family:
+One builder covers the paper's whole AdamW family:
 
 * 32-bit AdamW        — ``adamw32(lr)``                       (no compression)
 * 8-bit  AdamW [15]   — ``adamw8bit(lr)``   B2048/DE both moments, embeddings
@@ -10,41 +10,39 @@ One factory covers the paper's whole AdamW family:
 * 4-bit  Factor(ours) — ``factor4bit(lr)``  m: B128/DE; v factored for
                         ndim>=2, quantized Rank-1/Linear for 1-d
 
-Per-leaf state is chosen by ``QuantPolicy`` (threshold 4096, App. D.1). The
-update is Alg. 1: decompress -> AdamW step -> compress; only the compressed
-states persist between steps.
+Each is ``chain(compressed(scale_by_adam(...), policies),
+add_decayed_weights(wd), scale_by_learning_rate(lr))`` — the Alg. 1
+decompress -> step -> compress machinery lives once in
+``transform.compressed``, with per-leaf state chosen by ``QuantPolicy``
+(threshold 4096, App. D.1).  ``use_kernel=True`` attaches a
+``FusedAdamWRoute`` so eligible leaves run the fused Pallas kernel.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional, Tuple, Union
+import dataclasses
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.optimizers.base import (
-    FactoredMoment,
-    Optimizer,
-    QuantPolicy,
-    compress_moment,
-    decompress_moment,
-    tree_paths,
+from repro.core.optimizers.base import Optimizer, QuantPolicy
+from repro.core.optimizers.transform import (
+    FusedAdamWRoute,
+    Schedule,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    compressed,
+    scale_by_adam,
+    scale_by_learning_rate,
 )
-from repro.core.quantizer import QuantConfig, QuantizedTensor
+from repro.core.quantizer import QuantConfig
 
 __all__ = ["quantized_adamw", "adamw32", "adamw8bit", "adamw4bit", "factor4bit"]
-
-Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
 
 # Paper-named quantizer presets (Sec. 5).
 M_4BIT = QuantConfig(bits=4, normalization="blockwise", block_size=128, mapping="de", signed=True)
 V_4BIT = QuantConfig(bits=4, normalization="rank1", mapping="linear", signed=False)
 M_8BIT = QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de", signed=True)
 V_8BIT = QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de", signed=False)
-
-
-def _resolve_lr(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
-    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
 
 
 def quantized_adamw(
@@ -66,125 +64,21 @@ def quantized_adamw(
     """
     m_policy = m_policy or QuantPolicy()
     v_policy = v_policy or QuantPolicy()
-
-    def init(params):
-        paths = tree_paths(params)
-
-        def init_m(path, p):
-            mode = m_policy.mode(path, p.shape)
-            zero = jnp.zeros(p.shape, jnp.float32)
-            return compress_moment(zero, mode, m_policy.config)
-
-        def init_v(path, p):
-            mode = v_policy.mode(path, p.shape)
-            if mode == "factor":
-                return FactoredMoment.zeros(p.shape)
-            zero = jnp.zeros(p.shape, jnp.float32)
-            return compress_moment(zero, mode, v_policy.config)
-
-        return {
-            "m": jax.tree_util.tree_map(init_m, paths, params),
-            "v": jax.tree_util.tree_map(init_v, paths, params),
-            "step": jnp.zeros((), jnp.int32),
-        }
-
-    def update(grads, state, params, key: Optional[jax.Array] = None):
-        step = state["step"] + 1
-        lr_t = _resolve_lr(lr, step)
-        bc1 = 1.0 - jnp.power(jnp.float32(b1), step.astype(jnp.float32))
-        bc2 = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
-
-        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
-        leaves_p = treedef.flatten_up_to(params)
-        is_state_leaf = lambda x: isinstance(x, (QuantizedTensor, FactoredMoment))
-        leaves_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_state_leaf)[0]
-        leaves_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_state_leaf)[0]
-
-        new_p, new_m, new_v = [], [], []
-        for i, (g, p, m_s, v_s) in enumerate(
-            zip(leaves_g, leaves_p, leaves_m, leaves_v)
-        ):
-            leaf_key = None
-            if key is not None:
-                leaf_key = jax.random.fold_in(key, i)
-            if use_kernel and _kernel_eligible(m_s, v_s, p):
-                from repro.kernels import ops as kernel_ops
-
-                p2, m2, v2 = kernel_ops.fused_adamw4_leaf(
-                    p, g, m_s, v_s, lr_t, b1, b2, eps, weight_decay, bc1, bc2
-                )
-            else:
-                p2, m2, v2 = _reference_leaf_update(
-                    p, g, m_s, v_s, lr_t, b1, b2, eps, weight_decay, bc1, bc2,
-                    leaf_key,
-                )
-            new_p.append(p2)
-            new_m.append(m2)
-            new_v.append(v2)
-
-        return (
-            jax.tree_util.tree_unflatten(treedef, new_p),
-            {
-                "m": jax.tree_util.tree_unflatten(treedef, new_m),
-                "v": jax.tree_util.tree_unflatten(treedef, new_v),
-                "step": step,
-            },
-        )
-
-    return Optimizer(init=init, update=update, name=name)
-
-
-def _kernel_eligible(m_s, v_s, p) -> bool:
-    return (
-        isinstance(m_s, QuantizedTensor)
-        and m_s.config.bits == 4
-        and m_s.config.normalization == "blockwise"
-        and m_s.config.block_size == 128
-        and not m_s.config.stochastic_rounding
-        and isinstance(v_s, QuantizedTensor)
-        and v_s.config.bits == 4
-        and v_s.config.normalization == "rank1"
-        and not v_s.config.stochastic_rounding
-        and p.ndim == 2
-        and p.shape[-1] % 256 == 0  # nibble + B128 tile alignment
+    kernel = (
+        FusedAdamWRoute(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+        if use_kernel
+        else None
     )
-
-
-def _reference_leaf_update(
-    p, g, m_s, v_s, lr_t, b1, b2, eps, weight_decay, bc1, bc2, key
-):
-    """Alg. 1 lines 3-5 for one leaf: decompress, AdamW (Eq. 1), compress."""
-    g = g.astype(jnp.float32)
-    m = decompress_moment(m_s)
-    m = b1 * m + (1.0 - b1) * g
-
-    if isinstance(v_s, FactoredMoment):
-        v_fac = v_s.ema_update(g * g, b2)
-        v = v_fac.reconstruct()
-        new_v = v_fac
-    else:
-        v = decompress_moment(v_s)
-        v = b2 * v + (1.0 - b2) * g * g
-        new_v = None  # compressed below
-
-    m_hat = m / bc1
-    v_hat = v / bc2
-    update = m_hat / (jnp.sqrt(v_hat) + eps)
-    p2 = (p.astype(jnp.float32) - lr_t * (update + weight_decay * p)).astype(p.dtype)
-
-    m_key = v_key = None
-    if key is not None:
-        m_key, v_key = jax.random.split(key)
-    if isinstance(m_s, QuantizedTensor):
-        m2 = compress_moment(m, "quant", m_s.config, key=m_key)
-    else:
-        m2 = m
-    if new_v is None:
-        if isinstance(v_s, QuantizedTensor):
-            new_v = compress_moment(v, "quant", v_s.config, key=v_key)
-        else:
-            new_v = v
-    return p2, m2, new_v
+    tx = chain(
+        compressed(
+            scale_by_adam(b1=b1, b2=b2, eps=eps),
+            {"m": m_policy, "v": v_policy},
+            kernel=kernel,
+        ),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(lr),
+    )
+    return as_optimizer(tx, name=name)
 
 
 # ---------------------------------------------------------------------------
@@ -213,8 +107,8 @@ def adamw4bit(lr: Schedule, stochastic_rounding: bool = False, use_kernel: bool 
     m_cfg = M_4BIT
     v_cfg = V_4BIT
     if stochastic_rounding:
-        m_cfg = QuantConfig(**{**m_cfg.__dict__, "stochastic_rounding": True})
-        v_cfg = QuantConfig(**{**v_cfg.__dict__, "stochastic_rounding": True})
+        m_cfg = dataclasses.replace(m_cfg, stochastic_rounding=True)
+        v_cfg = dataclasses.replace(v_cfg, stochastic_rounding=True)
     return quantized_adamw(
         lr,
         m_policy=QuantPolicy(config=m_cfg),

@@ -1,28 +1,28 @@
 """SGDM and compressed SGDM (paper Alg. 2, used by Theorem 1).
 
 Note Alg. 2 uses the *accumulator* convention m_t = β m_{t-1} + g_t (no
-(1-β) damping), matching the theorem's constants.
+(1-β) damping), matching the theorem's constants.  Built as
+``chain(compressed(trace(β), {"trace": policy}), add_decayed_weights,
+scale_by_learning_rate)`` — the momentum state field is named ``trace``
+(reachable as ``state["trace"]`` on the chain state).
 """
 
 from __future__ import annotations
 
-from typing import Callable, Optional, Union
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-
-from repro.core.optimizers.base import (
-    Optimizer,
-    QuantPolicy,
-    compress_moment,
-    decompress_moment,
-    tree_paths,
+from repro.core.optimizers.base import Optimizer, QuantPolicy
+from repro.core.optimizers.transform import (
+    Schedule,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    compressed,
+    scale_by_learning_rate,
+    trace,
 )
-from repro.core.quantizer import QuantizedTensor
 
 __all__ = ["sgdm", "sgdm4bit"]
-
-Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
 
 
 def sgdm(
@@ -33,54 +33,12 @@ def sgdm(
     name: str = "sgdm",
 ) -> Optimizer:
     m_policy = m_policy or QuantPolicy()
-
-    def init(params):
-        paths = tree_paths(params)
-
-        def init_m(path, p):
-            mode = m_policy.mode(path, p.shape)
-            return compress_moment(
-                jnp.zeros(p.shape, jnp.float32), mode, m_policy.config
-            )
-
-        return {
-            "m": jax.tree_util.tree_map(init_m, paths, params),
-            "step": jnp.zeros((), jnp.int32),
-        }
-
-    def update(grads, state, params, key=None):
-        step = state["step"] + 1
-        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
-
-        is_leaf = lambda x: isinstance(x, QuantizedTensor)
-        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
-        leaves_p = treedef.flatten_up_to(params)
-        leaves_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_leaf)[0]
-
-        new_p, new_m = [], []
-        for i, (g, p, m_s) in enumerate(zip(leaves_g, leaves_p, leaves_m)):
-            g = g.astype(jnp.float32)
-            m = decompress_moment(m_s)
-            m = beta * m + g  # Alg. 2 line 4 (accumulator form)
-            p2 = (
-                p.astype(jnp.float32) - lr_t * (m + weight_decay * p)
-            ).astype(p.dtype)
-            if isinstance(m_s, QuantizedTensor):
-                leaf_key = (
-                    jax.random.fold_in(key, i) if key is not None else None
-                )
-                m2 = compress_moment(m, "quant", m_s.config, key=leaf_key)
-            else:
-                m2 = m
-            new_p.append(p2)
-            new_m.append(m2)
-
-        return (
-            jax.tree_util.tree_unflatten(treedef, new_p),
-            {"m": jax.tree_util.tree_unflatten(treedef, new_m), "step": step},
-        )
-
-    return Optimizer(init=init, update=update, name=name)
+    tx = chain(
+        compressed(trace(beta), {"trace": m_policy}),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(lr),
+    )
+    return as_optimizer(tx, name=name)
 
 
 def sgdm4bit(lr: Schedule, beta: float = 0.9, stochastic_rounding: bool = True, **kw) -> Optimizer:

@@ -2,32 +2,23 @@
 
 Sublinear memory: one accumulator vector per tensor dimension (the cover of
 co-dimension-1 slices used in the SM3 paper's experiments). The β1>0 momentum
-variant matches the paper's comparison setup.
+variant matches the paper's comparison setup.  The update rule lives in
+``transform.scale_by_sm3``; this module is just the paper-named chain.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Union
-
-import jax
-import jax.numpy as jnp
-
 from repro.core.optimizers.base import Optimizer
+from repro.core.optimizers.transform import (
+    Schedule,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    scale_by_learning_rate,
+    scale_by_sm3,
+)
 
 __all__ = ["sm3"]
-
-Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
-
-
-def _broadcast_min(accs, shape):
-    """nu_ij = min_r acc_r[i_r] broadcast to ``shape`` (Alg. 4 style)."""
-    out = None
-    for r, acc in enumerate(accs):
-        view = [1] * len(shape)
-        view[r] = shape[r]
-        b = acc.reshape(view)
-        out = b if out is None else jnp.minimum(out, b)
-    return jnp.broadcast_to(out, shape)
 
 
 def sm3(
@@ -36,58 +27,9 @@ def sm3(
     eps: float = 1e-8,
     weight_decay: float = 0.01,
 ) -> Optimizer:
-    def init(params):
-        def init_acc(p):
-            if p.ndim == 0:
-                return (jnp.zeros((1,), jnp.float32),)
-            return tuple(jnp.zeros((d,), jnp.float32) for d in p.shape)
-
-        return {
-            "acc": jax.tree_util.tree_map(
-                init_acc, params, is_leaf=lambda x: hasattr(x, "shape")
-            ),
-            "m": jax.tree_util.tree_map(
-                lambda p: jnp.zeros(p.shape, jnp.float32), params
-            ),
-            "step": jnp.zeros((), jnp.int32),
-        }
-
-    def update(grads, state, params, key=None):
-        del key
-        step = state["step"] + 1
-        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
-
-        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
-        leaves_p = treedef.flatten_up_to(params)
-        leaves_acc = treedef.flatten_up_to(state["acc"])
-        leaves_m = treedef.flatten_up_to(state["m"])
-
-        new_p, new_acc, new_m = [], [], []
-        for g, p, accs, m in zip(leaves_g, leaves_p, leaves_acc, leaves_m):
-            g = g.astype(jnp.float32)
-            shape = g.shape if g.ndim > 0 else (1,)
-            g_ = g.reshape(shape)
-            nu = _broadcast_min(accs, shape) + g_ * g_
-            accs2 = tuple(
-                jnp.max(nu, axis=tuple(i for i in range(len(shape)) if i != r))
-                for r in range(len(shape))
-            )
-            u = (g_ / (jnp.sqrt(nu) + eps)).reshape(g.shape)
-            m2 = b1 * m + (1 - b1) * u
-            p2 = (p.astype(jnp.float32) - lr_t * (m2 + weight_decay * p)).astype(
-                p.dtype
-            )
-            new_p.append(p2)
-            new_acc.append(accs2)
-            new_m.append(m2)
-
-        return (
-            jax.tree_util.tree_unflatten(treedef, new_p),
-            {
-                "acc": jax.tree_util.tree_unflatten(treedef, new_acc),
-                "m": jax.tree_util.tree_unflatten(treedef, new_m),
-                "step": step,
-            },
-        )
-
-    return Optimizer(init=init, update=update, name="sm3")
+    tx = chain(
+        scale_by_sm3(b1=b1, eps=eps),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(lr),
+    )
+    return as_optimizer(tx, name="sm3")

@@ -32,12 +32,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, SHAPES, cell_is_runnable, get_config
-from repro.core.optimizers import adamw4bit
+from repro.core.optimizers import make_optimizer
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import decode_cache_len, input_specs
 from repro.models import ModelConfig, decode_step, init_model, loss_fn, prefill
 from repro.roofline.analysis import (
     collective_bytes_from_hlo,
+    cost_analysis_dict,
     model_flops,
     roofline_terms,
 )
@@ -97,7 +98,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, opt_name: str = "adam
 
     t0 = time.time()
     if shape.kind == "train":
-        opt = adamw4bit(1e-4)
+        opt = make_optimizer(opt_name, 1e-4)
         state_s = jax.eval_shape(lambda: make_train_state_from_shapes(params_s, opt))
         import jax.numpy as _jnp
         grad_dtype = _jnp.bfloat16 if os.environ.get("REPRO_GRAD_BF16") else None
@@ -162,7 +163,7 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, opt_name: str = "adam
 
     mem = compiled.memory_analysis()
     print(mem)  # proves it fits
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
     hlo = compiled.as_text()
     coll = collective_bytes_from_hlo(hlo)

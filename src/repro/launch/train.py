@@ -15,8 +15,9 @@ import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.core.optimizers import (
-    OPTIMIZER_REGISTRY,
     linear_warmup_linear_decay,
+    make_optimizer,
+    optimizer_names,
     state_nbytes,
 )
 from repro.data.pipeline import DataConfig, SyntheticLM
@@ -25,13 +26,31 @@ from repro.train.checkpoint import CheckpointManager, latest_step
 from repro.train.train_loop import build_train_step, make_train_state
 
 
+def _parse_value(v: str):
+    """--opt-arg value: bool words, then any Python literal (1e-8, -0.5, 3),
+    falling back to the raw string."""
+    import ast
+
+    low = v.lower()
+    if low in ("true", "false"):
+        return low == "true"
+    try:
+        return ast.literal_eval(v)
+    except (ValueError, SyntaxError):
+        return v
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True, choices=list(ARCHS))
     ap.add_argument("--reduced", action="store_true",
                     help="CPU-scale config of the same family")
     ap.add_argument("--optimizer", default="adamw4bit",
-                    choices=list(OPTIMIZER_REGISTRY))
+                    choices=list(optimizer_names()))
+    ap.add_argument("--opt-arg", action="append", default=[],
+                    metavar="K=V",
+                    help="optimizer override, e.g. --opt-arg use_kernel=true "
+                         "(validated by make_optimizer)")
     ap.add_argument("--steps", type=int, default=50)
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
@@ -50,8 +69,12 @@ def main():
         )
 
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
-    opt = OPTIMIZER_REGISTRY[args.optimizer](
-        linear_warmup_linear_decay(args.lr, max(1, args.steps // 10), args.steps)
+    overrides = {k: _parse_value(v) for k, _, v in
+                 (kv.partition("=") for kv in args.opt_arg)}
+    opt = make_optimizer(
+        args.optimizer,
+        linear_warmup_linear_decay(args.lr, max(1, args.steps // 10), args.steps),
+        **overrides,
     )
     state = make_train_state(params, opt)
     print(f"arch={cfg.name} optimizer={opt.name} "

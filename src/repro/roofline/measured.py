@@ -34,7 +34,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
-from repro.core.optimizers import adamw4bit
+from repro.core.optimizers import make_optimizer
 from repro.launch.specs import decode_cache_len
 from repro.models import ModelConfig, init_model, plan_scan_units
 from repro.models.blocks import apply_block, init_block, init_block_cache
@@ -44,6 +44,7 @@ from repro.roofline.analysis import (
     HW,
     V5E,
     collective_bytes_from_hlo,
+    cost_analysis_dict,
     model_flops,
     roofline_terms,
 )
@@ -110,7 +111,7 @@ def _compile_cost(fn, args, in_shardings, mesh: Mesh, out_shardings=None):
             fn, in_shardings=in_shardings, out_shardings=out_shardings
         ).lower(*args)
         compiled = lowered.compile()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     return (
         float(cost.get("flops", 0.0)),
@@ -162,7 +163,7 @@ def measure_cell(
     shape_name: str,
     mesh: Mesh,
     hw: HW = V5E,
-    optimizer_factory=adamw4bit,
+    optimizer: str = "adamw4bit",
 ) -> Dict[str, Any]:
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
@@ -413,7 +414,7 @@ def measure_cell(
             meas.add("tail/embed_grad", fl, by, hlo)
 
         # optimizer update over the full parameter set (elementwise, no scans)
-        opt = optimizer_factory(1e-4)
+        opt = make_optimizer(optimizer, 1e-4)
         params_zeros = lambda: jax.tree_util.tree_map(
             lambda s: jnp.zeros(s.shape, s.dtype), params_s
         )

@@ -98,24 +98,74 @@ def _state_leaf_shardings(param, axes, leaf, mesh: Mesh, zero: bool):
 
 
 def opt_state_shardings(opt_state, params, axes, mesh: Mesh, zero: bool = True):
-    """Shardings for an optimizer state {'m':…, 'v':…, 'step':…} (or the
-    sgdm {'m':…} / adafactor variants). Moment trees mirror params."""
+    """Shardings mirroring any optimizer-state pytree.
+
+    Works structurally rather than by fixed dict keys so it covers both the
+    legacy ``{'m':…, 'v':…, 'step':…}`` layout and transform-chain states
+    (``ChainState`` / ``CompressedState`` / per-rule NamedTuples): any
+    subtree that *mirrors the param tree* (one state leaf per param leaf with
+    matching logical shape — raw array, ``QuantizedTensor``, or
+    ``FactoredMoment``) is sharded like the params (+ ZeRO); step counters
+    and other scalars are replicated; unrecognized leaves fall back to
+    replicated.
+    """
+    from repro.core.optimizers.transform import ChainState
+
     treedef = jax.tree_util.tree_structure(params)
     p_leaves = jax.tree_util.tree_leaves(params)
     a_leaves = jax.tree_util.tree_leaves(axes, is_leaf=_IS_AXES_LEAF)
 
-    out = {}
-    for key, sub in opt_state.items():
-        if key == "step":
-            out[key] = replicated(mesh)
-            continue
-        s_leaves = treedef.flatten_up_to(sub)
-        shardings = [
-            _state_leaf_shardings(p, a, s, mesh, zero)
-            for p, a, s in zip(p_leaves, a_leaves, s_leaves)
-        ]
-        out[key] = jax.tree_util.tree_unflatten(treedef, shardings)
-    return out
+    def _mirror_leaves(sub):
+        """State subtrees at param-leaf positions, or None if not a mirror."""
+        try:
+            s_leaves = treedef.flatten_up_to(sub)
+        except (ValueError, TypeError, KeyError):
+            return None
+        if len(s_leaves) != len(p_leaves):
+            return None
+        for p, s in zip(p_leaves, s_leaves):
+            if isinstance(s, (QuantizedTensor, FactoredMoment)):
+                if tuple(s.shape) != tuple(p.shape):
+                    return None
+            elif hasattr(s, "shape") and not isinstance(s, (dict, list, tuple)):
+                if tuple(s.shape) != tuple(p.shape):
+                    return None
+            else:
+                return None
+        return s_leaves
+
+    def walk(sub):
+        if sub is None:
+            return None
+        s_leaves = _mirror_leaves(sub)
+        if s_leaves is not None:
+            return jax.tree_util.tree_unflatten(
+                treedef,
+                [
+                    _state_leaf_shardings(p, a, s, mesh, zero)
+                    for p, a, s in zip(p_leaves, a_leaves, s_leaves)
+                ],
+            )
+        if isinstance(sub, ChainState):
+            return ChainState(walk(s) for s in sub.states)
+        if isinstance(sub, tuple) and hasattr(sub, "_fields"):  # NamedTuple state
+            return type(sub)(*(walk(v) for v in sub))
+        if isinstance(sub, dict):
+            return {k: walk(v) for k, v in sub.items()}
+        if isinstance(sub, (tuple, list)):
+            return type(sub)(walk(v) for v in sub)
+        if isinstance(sub, QuantizedTensor):  # outside a mirror: stay replicated
+            return QuantizedTensor(
+                replicated(mesh),
+                tuple(replicated(mesh) for _ in sub.scales),
+                sub.shape,
+                sub.config,
+            )
+        if isinstance(sub, FactoredMoment):
+            return FactoredMoment(replicated(mesh), replicated(mesh), sub.shape)
+        return replicated(mesh)  # step counters and other scalars/arrays
+
+    return walk(opt_state)
 
 
 def batch_shardings(batch, mesh: Mesh):

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core.optimizers.base import Optimizer
+from repro.core.optimizers.transform import GradientTransformation, as_optimizer
 from repro.models import ModelConfig, loss_fn
 from repro.sharding import (
     batch_shardings,
@@ -53,7 +54,15 @@ class TrainState:
         return cls(*children)
 
 
-def make_train_state(params, optimizer: Optimizer) -> TrainState:
+def _coerce_optimizer(optimizer) -> Optimizer:
+    """Accept either the Optimizer facade or a bare transformation chain."""
+    if isinstance(optimizer, GradientTransformation):
+        return as_optimizer(optimizer)
+    return optimizer
+
+
+def make_train_state(params, optimizer) -> TrainState:
+    optimizer = _coerce_optimizer(optimizer)
     return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
 
 
@@ -84,7 +93,7 @@ def _constrain_grads_zero(grads, params, axes, mesh: Mesh, grad_dtype=None):
 
 def build_train_step(
     cfg: ModelConfig,
-    optimizer: Optimizer,
+    optimizer,  # Optimizer facade or a bare GradientTransformation chain
     mesh: Optional[Mesh] = None,
     axes=None,
     *,
@@ -97,6 +106,7 @@ def build_train_step(
     ``accum_steps > 1`` splits the batch leading dim into microbatches and
     accumulates gradients in fp32 (scan over microbatches — peak activation
     memory drops by the accumulation factor)."""
+    optimizer = _coerce_optimizer(optimizer)
 
     def compute_grads(params, batch):
         (loss, metrics), grads = jax.value_and_grad(

@@ -1,0 +1,386 @@
+"""Pre-refactor optimizer implementations, kept verbatim as test oracles.
+
+These are the monolithic per-leaf flatten loops that the transform API
+(chain/compressed/partition) replaced.  tests/test_transforms.py asserts the
+chain rebuilds are BIT-IDENTICAL to these over multi-step trajectories —
+params and every compressed/factored/raw state leaf.  Do not "improve" this
+file; its value is that it does not change.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optimizers.base import (
+    FactoredMoment,
+    Optimizer,
+    QuantPolicy,
+    compress_moment,
+    decompress_moment,
+    tree_paths,
+)
+from repro.core.quantizer import QuantConfig, QuantizedTensor
+
+Schedule = Union[float, Callable[[jnp.ndarray], jnp.ndarray]]
+
+M_4BIT = QuantConfig(bits=4, normalization="blockwise", block_size=128, mapping="de", signed=True)
+V_4BIT = QuantConfig(bits=4, normalization="rank1", mapping="linear", signed=False)
+M_8BIT = QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de", signed=True)
+V_8BIT = QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de", signed=False)
+
+
+def _resolve_lr(lr: Schedule, step: jnp.ndarray) -> jnp.ndarray:
+    return lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+
+def legacy_quantized_adamw(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    m_policy: Optional[QuantPolicy] = None,
+    v_policy: Optional[QuantPolicy] = None,
+    use_kernel: bool = False,
+    name: str = "adamw",
+) -> Optimizer:
+    m_policy = m_policy or QuantPolicy()
+    v_policy = v_policy or QuantPolicy()
+
+    def init(params):
+        paths = tree_paths(params)
+
+        def init_m(path, p):
+            mode = m_policy.mode(path, p.shape)
+            zero = jnp.zeros(p.shape, jnp.float32)
+            return compress_moment(zero, mode, m_policy.config)
+
+        def init_v(path, p):
+            mode = v_policy.mode(path, p.shape)
+            if mode == "factor":
+                return FactoredMoment.zeros(p.shape)
+            zero = jnp.zeros(p.shape, jnp.float32)
+            return compress_moment(zero, mode, v_policy.config)
+
+        return {
+            "m": jax.tree_util.tree_map(init_m, paths, params),
+            "v": jax.tree_util.tree_map(init_v, paths, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, key: Optional[jax.Array] = None):
+        step = state["step"] + 1
+        lr_t = _resolve_lr(lr, step)
+        bc1 = 1.0 - jnp.power(jnp.float32(b1), step.astype(jnp.float32))
+        bc2 = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        is_state_leaf = lambda x: isinstance(x, (QuantizedTensor, FactoredMoment))
+        leaves_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_state_leaf)[0]
+        leaves_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_state_leaf)[0]
+
+        new_p, new_m, new_v = [], [], []
+        for i, (g, p, m_s, v_s) in enumerate(
+            zip(leaves_g, leaves_p, leaves_m, leaves_v)
+        ):
+            leaf_key = None
+            if key is not None:
+                leaf_key = jax.random.fold_in(key, i)
+            if use_kernel and _kernel_eligible(m_s, v_s, p):
+                from repro.kernels import ops as kernel_ops
+
+                p2, m2, v2 = kernel_ops.fused_adamw4_leaf(
+                    p, g, m_s, v_s, lr_t, b1, b2, eps, weight_decay, bc1, bc2
+                )
+            else:
+                p2, m2, v2 = _reference_leaf_update(
+                    p, g, m_s, v_s, lr_t, b1, b2, eps, weight_decay, bc1, bc2,
+                    leaf_key,
+                )
+            new_p.append(p2)
+            new_m.append(m2)
+            new_v.append(v2)
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, new_p),
+            {
+                "m": jax.tree_util.tree_unflatten(treedef, new_m),
+                "v": jax.tree_util.tree_unflatten(treedef, new_v),
+                "step": step,
+            },
+        )
+
+    return Optimizer(init=init, update=update, name=name)
+
+
+def _kernel_eligible(m_s, v_s, p) -> bool:
+    return (
+        isinstance(m_s, QuantizedTensor)
+        and m_s.config.bits == 4
+        and m_s.config.normalization == "blockwise"
+        and m_s.config.block_size == 128
+        and not m_s.config.stochastic_rounding
+        and isinstance(v_s, QuantizedTensor)
+        and v_s.config.bits == 4
+        and v_s.config.normalization == "rank1"
+        and not v_s.config.stochastic_rounding
+        and p.ndim == 2
+        and p.shape[-1] % 256 == 0  # nibble + B128 tile alignment
+    )
+
+
+def _reference_leaf_update(
+    p, g, m_s, v_s, lr_t, b1, b2, eps, weight_decay, bc1, bc2, key
+):
+    g = g.astype(jnp.float32)
+    m = decompress_moment(m_s)
+    m = b1 * m + (1.0 - b1) * g
+
+    if isinstance(v_s, FactoredMoment):
+        v_fac = v_s.ema_update(g * g, b2)
+        v = v_fac.reconstruct()
+        new_v = v_fac
+    else:
+        v = decompress_moment(v_s)
+        v = b2 * v + (1.0 - b2) * g * g
+        new_v = None  # compressed below
+
+    m_hat = m / bc1
+    v_hat = v / bc2
+    update = m_hat / (jnp.sqrt(v_hat) + eps)
+    p2 = (p.astype(jnp.float32) - lr_t * (update + weight_decay * p)).astype(p.dtype)
+
+    m_key = v_key = None
+    if key is not None:
+        m_key, v_key = jax.random.split(key)
+    if isinstance(m_s, QuantizedTensor):
+        m2 = compress_moment(m, "quant", m_s.config, key=m_key)
+    else:
+        m2 = m
+    if new_v is None:
+        if isinstance(v_s, QuantizedTensor):
+            new_v = compress_moment(v, "quant", v_s.config, key=v_key)
+        else:
+            new_v = v
+    return p2, m2, new_v
+
+
+def legacy_sgdm(
+    lr: Schedule,
+    beta: float = 0.9,
+    weight_decay: float = 0.0,
+    m_policy: Optional[QuantPolicy] = None,
+    name: str = "sgdm",
+) -> Optimizer:
+    m_policy = m_policy or QuantPolicy()
+
+    def init(params):
+        paths = tree_paths(params)
+
+        def init_m(path, p):
+            mode = m_policy.mode(path, p.shape)
+            return compress_moment(
+                jnp.zeros(p.shape, jnp.float32), mode, m_policy.config
+            )
+
+        return {
+            "m": jax.tree_util.tree_map(init_m, paths, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, key=None):
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+        is_leaf = lambda x: isinstance(x, QuantizedTensor)
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        leaves_m = jax.tree_util.tree_flatten(state["m"], is_leaf=is_leaf)[0]
+
+        new_p, new_m = [], []
+        for i, (g, p, m_s) in enumerate(zip(leaves_g, leaves_p, leaves_m)):
+            g = g.astype(jnp.float32)
+            m = decompress_moment(m_s)
+            m = beta * m + g
+            p2 = (
+                p.astype(jnp.float32) - lr_t * (m + weight_decay * p)
+            ).astype(p.dtype)
+            if isinstance(m_s, QuantizedTensor):
+                leaf_key = (
+                    jax.random.fold_in(key, i) if key is not None else None
+                )
+                m2 = compress_moment(m, "quant", m_s.config, key=leaf_key)
+            else:
+                m2 = m
+            new_p.append(p2)
+            new_m.append(m2)
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, new_p),
+            {"m": jax.tree_util.tree_unflatten(treedef, new_m), "step": step},
+        )
+
+    return Optimizer(init=init, update=update, name=name)
+
+
+def legacy_sgdm4bit(lr: Schedule, beta: float = 0.9, stochastic_rounding: bool = True, **kw) -> Optimizer:
+    cfg = QuantConfig(
+        bits=4,
+        normalization="blockwise",
+        block_size=128,
+        mapping="de",
+        signed=True,
+        stochastic_rounding=stochastic_rounding,
+    )
+    return legacy_sgdm(lr, beta=beta, m_policy=QuantPolicy(config=cfg), name="sgdm4bit", **kw)
+
+
+def _broadcast_min(accs, shape):
+    out = None
+    for r, acc in enumerate(accs):
+        view = [1] * len(shape)
+        view[r] = shape[r]
+        b = acc.reshape(view)
+        out = b if out is None else jnp.minimum(out, b)
+    return jnp.broadcast_to(out, shape)
+
+
+def legacy_sm3(
+    lr: Schedule,
+    b1: float = 0.9,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    def init(params):
+        def init_acc(p):
+            if p.ndim == 0:
+                return (jnp.zeros((1,), jnp.float32),)
+            return tuple(jnp.zeros((d,), jnp.float32) for d in p.shape)
+
+        return {
+            "acc": jax.tree_util.tree_map(
+                init_acc, params, is_leaf=lambda x: hasattr(x, "shape")
+            ),
+            "m": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            ),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, key=None):
+        del key
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        leaves_acc = treedef.flatten_up_to(state["acc"])
+        leaves_m = treedef.flatten_up_to(state["m"])
+
+        new_p, new_acc, new_m = [], [], []
+        for g, p, accs, m in zip(leaves_g, leaves_p, leaves_acc, leaves_m):
+            g = g.astype(jnp.float32)
+            shape = g.shape if g.ndim > 0 else (1,)
+            g_ = g.reshape(shape)
+            nu = _broadcast_min(accs, shape) + g_ * g_
+            accs2 = tuple(
+                jnp.max(nu, axis=tuple(i for i in range(len(shape)) if i != r))
+                for r in range(len(shape))
+            )
+            u = (g_ / (jnp.sqrt(nu) + eps)).reshape(g.shape)
+            m2 = b1 * m + (1 - b1) * u
+            p2 = (p.astype(jnp.float32) - lr_t * (m2 + weight_decay * p)).astype(
+                p.dtype
+            )
+            new_p.append(p2)
+            new_acc.append(accs2)
+            new_m.append(m2)
+
+        return (
+            jax.tree_util.tree_unflatten(treedef, new_p),
+            {
+                "acc": jax.tree_util.tree_unflatten(treedef, new_acc),
+                "m": jax.tree_util.tree_unflatten(treedef, new_m),
+                "step": step,
+            },
+        )
+
+    return Optimizer(init=init, update=update, name="sm3")
+
+
+def legacy_adafactor(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.01,
+) -> Optimizer:
+    def init(params):
+        def init_v(p):
+            if p.ndim >= 2:
+                return FactoredMoment.zeros(p.shape)
+            return jnp.zeros(p.shape, jnp.float32)
+
+        state = {
+            "v": jax.tree_util.tree_map(init_v, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+        if b1 > 0:
+            state["m"] = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+        return state
+
+    def update(grads, state, params, key=None):
+        del key
+        step = state["step"] + 1
+        lr_t = lr(step) if callable(lr) else jnp.asarray(lr, jnp.float32)
+        bc2 = 1.0 - jnp.power(jnp.float32(b2), step.astype(jnp.float32))
+
+        is_leaf = lambda x: isinstance(x, FactoredMoment)
+        leaves_g, treedef = jax.tree_util.tree_flatten(grads)
+        leaves_p = treedef.flatten_up_to(params)
+        leaves_v = jax.tree_util.tree_flatten(state["v"], is_leaf=is_leaf)[0]
+        leaves_m = (
+            jax.tree_util.tree_flatten(state["m"])[0]
+            if b1 > 0
+            else [None] * len(leaves_g)
+        )
+
+        new_p, new_v, new_m = [], [], []
+        for g, p, v_s, m in zip(leaves_g, leaves_p, leaves_v, leaves_m):
+            g = g.astype(jnp.float32)
+            sq = g * g + eps
+            if isinstance(v_s, FactoredMoment):
+                v2 = v_s.ema_update(sq, b2)
+                v_hat = v2.reconstruct() / bc2
+            else:
+                v2 = b2 * v_s + (1 - b2) * sq
+                v_hat = v2 / bc2
+            u = g / jnp.sqrt(jnp.maximum(v_hat, eps))
+            rms_u = jnp.sqrt(jnp.mean(u * u) + 1e-30)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            if m is not None:
+                m2 = b1 * m + (1 - b1) * u
+                new_m.append(m2)
+                u = m2
+            p2 = (p.astype(jnp.float32) - lr_t * (u + weight_decay * p)).astype(
+                p.dtype
+            )
+            new_p.append(p2)
+            new_v.append(v2)
+
+        out_state = {
+            "v": jax.tree_util.tree_unflatten(treedef, new_v),
+            "step": step,
+        }
+        if b1 > 0:
+            out_state["m"] = jax.tree_util.tree_unflatten(treedef, new_m)
+        return jax.tree_util.tree_unflatten(treedef, new_p), out_state
+
+    return Optimizer(init=init, update=update, name=f"adafactor(b1={b1})")

@@ -7,6 +7,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # compiles one train step per architecture
+
 from repro.configs import ARCHS, reduced_config
 from repro.core.optimizers import adamw4bit
 from repro.models import decode_step, init_model, init_serve_cache, loss_fn

@@ -2,6 +2,10 @@
 
 import math
 
+import pytest as _pytest
+
+pytestmark = _pytest.mark.slow  # decode-parity sweeps compile whole models
+
 import jax
 import jax.numpy as jnp
 import numpy as np

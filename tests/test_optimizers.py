@@ -207,7 +207,7 @@ def test_sgdm4bit_converges_with_sr():
     target = jnp.zeros_like(params["w"])
     key = jax.random.PRNGKey(0)
     _, state, losses = _run_steps(sgdm4bit(5e-3), params, target, 80, key=key)
-    assert isinstance(state["m"]["w"], QuantizedTensor)
+    assert isinstance(state["trace"]["w"], QuantizedTensor)
     assert losses[-1] < 0.2 * losses[0]
 
 

@@ -161,6 +161,7 @@ def test_run_with_recovery_replays_from_checkpoint():
 # ---------------------------------------------------------------------------
 
 
+@pytest.mark.slow
 def test_train_restore_continuity(tmp_path):
     cfg = reduced_config("internlm2-1.8b")
     params, axes = init_model(jax.random.PRNGKey(0), cfg)
