@@ -36,11 +36,15 @@ DATA_CFG = DataConfig(vocab_size=512, seq_len=64, global_batch=16, seed=0)
 
 
 def train_small_lm(optimizer, steps: int = 150, cfg: ModelConfig = BENCH_CFG,
-                   seed: int = 0) -> Dict[str, float]:
-    """Train the benchmark LM; returns summary metrics."""
+                   seed: int = 0, sr_seed: int = None) -> Dict[str, float]:
+    """Train the benchmark LM; returns summary metrics.
+
+    ``sr_seed`` threads a stochastic-rounding PRNG key through the train
+    step (needed for SR optimizers to actually round stochastically)."""
     params, _ = init_model(jax.random.PRNGKey(seed), cfg)
     p0 = jax.tree_util.tree_map(lambda x: np.asarray(x), params)
-    state = make_train_state(params, optimizer)
+    key = jax.random.PRNGKey(sr_seed) if sr_seed is not None else None
+    state = make_train_state(params, optimizer, key=key)
     step_fn = jax.jit(build_train_step(cfg, optimizer))
     data = SyntheticLM(DATA_CFG)
 

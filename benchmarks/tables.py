@@ -63,20 +63,23 @@ def tab1_second_moment_ablation() -> List[Tuple[str, float, str]]:
 
 
 def tab2_optimizer_comparison() -> List[Tuple[str, float, str]]:
-    """Tab. 2: full-precision vs memory-efficient optimizers."""
+    """Tab. 2: full-precision vs memory-efficient optimizers (the production
+    partition preset rides along as the quality row for fp32-embeddings +
+    4-bit-SR-body training)."""
     opts = [
-        ("32bit-AdamW", make_optimizer("adamw32", LR)),
-        ("Adafactor", make_optimizer("adafactor", LR, b1=0.9)),
-        ("Adafactor-b1=0", make_optimizer("adafactor", LR, b1=0.0)),
-        ("SM3", make_optimizer("sm3", LR)),
-        ("8bit-AdamW", make_optimizer("adamw8bit", LR, exclude_embeddings=True)),
-        ("4bit-AdamW", make_optimizer("adamw4bit", LR)),
-        ("4bit-Factor", make_optimizer("factor4bit", LR)),
+        ("32bit-AdamW", make_optimizer("adamw32", LR), None),
+        ("Adafactor", make_optimizer("adafactor", LR, b1=0.9), None),
+        ("Adafactor-b1=0", make_optimizer("adafactor", LR, b1=0.0), None),
+        ("SM3", make_optimizer("sm3", LR), None),
+        ("8bit-AdamW", make_optimizer("adamw8bit", LR, exclude_embeddings=True), None),
+        ("4bit-AdamW", make_optimizer("adamw4bit", LR), None),
+        ("4bit-Factor", make_optimizer("factor4bit", LR), None),
+        ("production4bit-SR", make_optimizer("production4bit", LR), 0),
     ]
     rows = []
     base = None
-    for name, opt in opts:
-        r = train_small_lm(opt, steps=80)
+    for name, opt, sr_seed in opts:
+        r = train_small_lm(opt, steps=80, sr_seed=sr_seed)
         if name == "32bit-AdamW":
             base = r["loss_final"]
         gap = r["loss_final"] - (base if base is not None else 0.0)
@@ -117,6 +120,7 @@ def tab4_memory() -> List[Tuple[str, float, str]]:
         ("8bit-AdamW", make_optimizer("adamw8bit", LR)),
         ("4bit-AdamW", make_optimizer("adamw4bit", LR)),
         ("4bit-Factor", make_optimizer("factor4bit", LR)),
+        ("production4bit", make_optimizer("production4bit", LR)),
         ("Adafactor-b1=0", make_optimizer("adafactor", LR, b1=0.0)),
         ("SM3", make_optimizer("sm3", LR)),
     ]

@@ -36,6 +36,11 @@ from repro.core.optimizers.schedule import (
     linear_warmup_cosine,
     linear_warmup_linear_decay,
 )
+from repro.core.optimizers.presets import (
+    PRODUCTION_FP32_PATTERNS,
+    production4bit,
+    production_labels,
+)
 from repro.core.optimizers.sgdm import sgdm, sgdm4bit
 from repro.core.optimizers.sm3 import sm3
 from repro.core.optimizers.transform import (
@@ -85,6 +90,10 @@ OPTIMIZER_SPECS: Dict[str, OptimizerSpec] = {
     "sgdm": OptimizerSpec(sgdm, "SGD with momentum (Alg. 2 accumulator form)"),
     "sgdm4bit": OptimizerSpec(
         sgdm4bit, "4-bit SGDM with stochastic rounding", sgdm
+    ),
+    "production4bit": OptimizerSpec(
+        production4bit,
+        "production preset: fp32 embed/head/norm/bias + 4-bit SR body",
     ),
 }
 
@@ -156,6 +165,9 @@ __all__ = [
     "scale_by_learning_rate",
     # paper-named constructors
     "quantized_adamw",
+    "production4bit",
+    "production_labels",
+    "PRODUCTION_FP32_PATTERNS",
     "adamw32",
     "adamw8bit",
     "adamw4bit",

@@ -36,13 +36,50 @@ from repro.core.optimizers.transform import (
 )
 from repro.core.quantizer import QuantConfig
 
-__all__ = ["quantized_adamw", "adamw32", "adamw8bit", "adamw4bit", "factor4bit"]
+__all__ = [
+    "adamw_chain",
+    "quantized_adamw",
+    "adamw32",
+    "adamw8bit",
+    "adamw4bit",
+    "factor4bit",
+]
 
 # Paper-named quantizer presets (Sec. 5).
 M_4BIT = QuantConfig(bits=4, normalization="blockwise", block_size=128, mapping="de", signed=True)
 V_4BIT = QuantConfig(bits=4, normalization="rank1", mapping="linear", signed=False)
 M_8BIT = QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de", signed=True)
 V_8BIT = QuantConfig(bits=8, normalization="blockwise", block_size=2048, mapping="de", signed=False)
+
+
+def adamw_chain(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    m_policy: Optional[QuantPolicy] = None,
+    v_policy: Optional[QuantPolicy] = None,
+    use_kernel: bool = False,
+):
+    """The bare AdamW transformation chain (no ``Optimizer`` facade) — the
+    building block ``partition()`` presets compose per-subtree."""
+    m_policy = m_policy or QuantPolicy()
+    v_policy = v_policy or QuantPolicy()
+    kernel = (
+        FusedAdamWRoute(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+        if use_kernel
+        else None
+    )
+    return chain(
+        compressed(
+            scale_by_adam(b1=b1, b2=b2, eps=eps),
+            {"m": m_policy, "v": v_policy},
+            kernel=kernel,
+        ),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(lr),
+    )
 
 
 def quantized_adamw(
@@ -62,21 +99,15 @@ def quantized_adamw(
     fused Pallas update in ``repro.kernels.ops`` instead of the reference
     dequant->update->requant composition.
     """
-    m_policy = m_policy or QuantPolicy()
-    v_policy = v_policy or QuantPolicy()
-    kernel = (
-        FusedAdamWRoute(lr=lr, b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
-        if use_kernel
-        else None
-    )
-    tx = chain(
-        compressed(
-            scale_by_adam(b1=b1, b2=b2, eps=eps),
-            {"m": m_policy, "v": v_policy},
-            kernel=kernel,
-        ),
-        add_decayed_weights(weight_decay),
-        scale_by_learning_rate(lr),
+    tx = adamw_chain(
+        lr,
+        b1=b1,
+        b2=b2,
+        eps=eps,
+        weight_decay=weight_decay,
+        m_policy=m_policy,
+        v_policy=v_policy,
+        use_kernel=use_kernel,
     )
     return as_optimizer(tx, name=name)
 

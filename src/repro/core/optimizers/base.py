@@ -47,7 +47,7 @@ class Optimizer(NamedTuple):
     name: str = "optimizer"
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 class FactoredMoment:
     """Adafactor-style factored second moment over the trailing two dims.
 
@@ -61,8 +61,9 @@ class FactoredMoment:
         self.col = col
         self.shape = tuple(shape)
 
-    def tree_flatten(self):
-        return (self.row, self.col), (self.shape,)
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        return ((k("row"), self.row), (k("col"), self.col)), (self.shape,)
 
     @classmethod
     def tree_unflatten(cls, aux, children):

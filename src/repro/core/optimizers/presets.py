@@ -1,0 +1,88 @@
+"""Production optimizer presets built on ``partition()``.
+
+The paper (Sec. 5) and the 8-bit-optimizers line of work both keep
+*sensitive* subtrees in full precision: embeddings (and the untied LM head)
+have heavy-tailed, token-sparse moment statistics that 4-bit states track
+poorly, while norm scales and biases are tiny — compressing them saves
+nothing and risks stability.  ``production4bit`` encodes that split once:
+
+    fp32 partition : embed / head / norm scales / biases  -> uncompressed AdamW
+    4-bit partition: everything else                      -> adamw4bit (+SR)
+
+Stochastic rounding defaults ON (the paper's unbiased-quantizer setting,
+Alg. 1 + Assumption 4); thread a PRNG key through the train step
+(``make_train_state(params, opt, key=...)``) to activate it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+from repro.core.optimizers.adamw import M_4BIT, V_4BIT, adamw_chain
+from repro.core.optimizers.base import Optimizer, QuantPolicy
+from repro.core.optimizers.transform import (
+    Schedule,
+    as_optimizer,
+    label_by_regex,
+    partition,
+)
+
+__all__ = ["PRODUCTION_FP32_PATTERNS", "production_labels", "production4bit"]
+
+# Leaf-path regexes routed to the fp32 partition.  Matches the repo's model
+# tree ("embed", "head", "final_norm/scale", per-block "*_norm", layernorm
+# "bias") and common external naming ("embedding", "ln_f", ...).
+PRODUCTION_FP32_PATTERNS: Tuple[str, ...] = (
+    r"embed",
+    r"head",
+    r"norm",
+    r"(^|/)scale($|/)",
+    r"(^|/)bias($|/)",
+    r"(^|/)ln_",
+)
+
+
+def production_labels(fp32_patterns: Tuple[str, ...] = PRODUCTION_FP32_PATTERNS):
+    """Label fn for ``partition()``: 'fp32' for sensitive leaves, '4bit' else."""
+    return label_by_regex(fp32_patterns, "fp32", "4bit")
+
+
+def production4bit(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    stochastic_rounding: bool = True,
+    use_kernel: bool = False,
+    fp32_patterns: Optional[Tuple[str, ...]] = None,
+    name: str = "production4bit",
+) -> Optimizer:
+    """The production training preset: fp32 embeddings/head/norms/biases,
+    4-bit (B128/DE m, Rank-1/Linear v) body with stochastic rounding.
+
+    ``fp32_patterns`` overrides which leaf paths stay uncompressed (regexes
+    over '/'-joined param paths); ``use_kernel`` routes eligible body leaves
+    through the fused Pallas kernel (requires ``stochastic_rounding=False`` —
+    the fused path is round-to-nearest only, and eligibility enforces it).
+    """
+    m_cfg, v_cfg = M_4BIT, V_4BIT
+    if stochastic_rounding:
+        m_cfg = dataclasses.replace(m_cfg, stochastic_rounding=True)
+        v_cfg = dataclasses.replace(v_cfg, stochastic_rounding=True)
+    common = dict(b1=b1, b2=b2, eps=eps, weight_decay=weight_decay)
+    tx = partition(
+        {
+            "fp32": adamw_chain(lr, **common),
+            "4bit": adamw_chain(
+                lr,
+                m_policy=QuantPolicy(config=m_cfg),
+                v_policy=QuantPolicy(config=v_cfg),
+                use_kernel=use_kernel,
+                **common,
+            ),
+        },
+        production_labels(tuple(fp32_patterns or PRODUCTION_FP32_PATTERNS)),
+    )
+    return as_optimizer(tx, name=name)

@@ -85,6 +85,8 @@ __all__ = [
     "chain",
     "compressed",
     "partition",
+    "PartitionState",
+    "MaskedNode",
     "label_by_regex",
     "as_optimizer",
     "apply_updates",
@@ -181,7 +183,7 @@ def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
 # ---------------------------------------------------------------------------
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 class ChainState:
     """Tuple of per-transform states with a migration-friendly ``[]``.
 
@@ -195,8 +197,10 @@ class ChainState:
     def __init__(self, states):
         self.states = tuple(states)
 
-    def tree_flatten(self):
-        return (self.states,), None
+    def tree_flatten_with_keys(self):
+        # keyed flattening => checkpoint manifests record readable paths
+        # (".states[2].inner.m['embed'].codes") instead of flat indices.
+        return ((jax.tree_util.GetAttrKey("states"), self.states),), None
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -723,8 +727,35 @@ class MaskedNode(NamedTuple):
     so masked positions simply vanish from flattened views)."""
 
 
-class PartitionState(NamedTuple):
-    states: Dict[str, Any]
+@jax.tree_util.register_pytree_with_keys_class
+class PartitionState:
+    """Per-label sub-states plus the init-time param paths (static aux).
+
+    Recording the paths lets ``update`` detect a param tree that drifted
+    since ``init`` — a leaf added after init raises ``KeyError`` instead of
+    silently training it with garbage (or no) state.
+    """
+
+    __slots__ = ("states", "param_paths")
+
+    def __init__(self, states, param_paths=None):
+        self.states = dict(states)
+        self.param_paths = None if param_paths is None else tuple(param_paths)
+
+    def tree_flatten_with_keys(self):
+        items = sorted(self.states.items())
+        return (
+            tuple((jax.tree_util.DictKey(k), v) for k, v in items),
+            (tuple(k for k, _ in items), self.param_paths),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        keys, paths = aux
+        return cls(dict(zip(keys, children)), paths)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"PartitionState(labels={sorted(self.states)})"
 
 
 def label_by_regex(
@@ -779,6 +810,9 @@ def partition(
                     f"known labels: {sorted(transforms)}"
                 )
 
+    def _param_paths(params):
+        return tuple(jax.tree_util.tree_leaves(tree_paths(params)))
+
     def init(params):
         lab_tree = _labels_tree(params)
         _check(jax.tree_util.tree_leaves(lab_tree))
@@ -786,22 +820,41 @@ def partition(
             {
                 lab: tx.init(_mask(params, lab_tree, lab))
                 for lab, tx in transforms.items()
-            }
+            },
+            _param_paths(params),
         )
 
     def update(updates, state, params=None, *, key=None):
+        if state.param_paths is not None:
+            cur = _param_paths(params)
+            if cur != state.param_paths:
+                added = set(cur) - set(state.param_paths)
+                removed = set(state.param_paths) - set(cur)
+                raise KeyError(
+                    "partition(): param tree changed since init() — "
+                    f"added {sorted(added)}, removed {sorted(removed)}; "
+                    "re-init the optimizer state (or migrate it) instead of "
+                    "training new params with stale partition state"
+                )
         lab_tree = _labels_tree(params)
         lab_leaves, treedef = jax.tree_util.tree_flatten(lab_tree)
         _check(lab_leaves)
 
+        # Distinct SR key per partition: leaf indices restart at 0 inside each
+        # masked subtree, so handing every partition the same key would give
+        # correlated quantization noise across partitions.
+        label_order = {lab: i for i, lab in enumerate(sorted(transforms))}
         per_label_u: Dict[str, Any] = {}
         new_states: Dict[str, Any] = {}
         for lab, tx in transforms.items():
+            k_lab = (
+                jax.random.fold_in(key, label_order[lab]) if key is not None else None
+            )
             u_l, s_l = tx.update(
                 _mask(updates, lab_tree, lab),
                 state.states[lab],
                 _mask(params, lab_tree, lab),
-                key=key,
+                key=k_lab,
             )
             per_label_u[lab] = treedef.flatten_up_to(u_l)
             new_states[lab] = s_l
@@ -809,7 +862,7 @@ def partition(
         merged = [per_label_u[lab][i] for i, lab in enumerate(lab_leaves)]
         return (
             jax.tree_util.tree_unflatten(treedef, merged),
-            PartitionState(new_states),
+            PartitionState(new_states, state.param_paths),
         )
 
     return GradientTransformation(init, update)

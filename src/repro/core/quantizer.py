@@ -63,7 +63,7 @@ B128_DE0 = QuantConfig(
 RANK1_LINEAR = QuantConfig(normalization="rank1", mapping="linear", signed=False)
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 class QuantizedTensor:
     """Compressed tensor: packed codes + normalization scales + static meta."""
 
@@ -80,8 +80,12 @@ class QuantizedTensor:
         self.config = config
 
     # -- pytree protocol --------------------------------------------------
-    def tree_flatten(self):
-        return (self.codes, self.scales), (self.shape, self.config)
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        return (
+            (k("codes"), self.codes),
+            (k("scales"), self.scales),
+        ), (self.shape, self.config)
 
     @classmethod
     def tree_unflatten(cls, aux, children):

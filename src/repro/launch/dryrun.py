@@ -99,7 +99,13 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, opt_name: str = "adam
     t0 = time.time()
     if shape.kind == "train":
         opt = make_optimizer(opt_name, 1e-4)
-        state_s = jax.eval_shape(lambda: make_train_state_from_shapes(params_s, opt))
+        # Always thread an SR key: proves the stochastic-rounding production
+        # path (adamw4bit+SR / production4bit) lowers and SPMD-partitions;
+        # deterministic optimizers simply ignore it.
+        sr_key = jax.random.PRNGKey(0)
+        state_s = jax.eval_shape(
+            lambda: make_train_state_from_shapes(params_s, opt, key=sr_key)
+        )
         import jax.numpy as _jnp
         grad_dtype = _jnp.bfloat16 if os.environ.get("REPRO_GRAD_BF16") else None
         step_fn = build_train_step(cfg, opt, mesh, axes, zero=True,
@@ -193,11 +199,11 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, opt_name: str = "adam
     return record
 
 
-def make_train_state_from_shapes(params_s, opt):
+def make_train_state_from_shapes(params_s, opt, key=None):
     params = jax.tree_util.tree_map(
         lambda s: jnp.zeros(s.shape, s.dtype), params_s
     )
-    return make_train_state(params, opt)
+    return make_train_state(params, opt, key=key)
 
 
 def run_all(out_path: str, meshes=("single", "multi"), archs=None, shapes=None):
@@ -240,6 +246,8 @@ def main():
     ap.add_argument("--arch", choices=list(ARCHS))
     ap.add_argument("--shape", choices=list(SHAPES))
     ap.add_argument("--mesh", choices=["single", "multi"], default="single")
+    ap.add_argument("--opt", default="adamw4bit",
+                    help="optimizer for train cells (e.g. production4bit)")
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--out", default="results/dryrun.json")
     args = ap.parse_args()
@@ -248,7 +256,7 @@ def main():
         run_all(args.out)
         return
 
-    rec = lower_cell(args.arch, args.shape, args.mesh)
+    rec = lower_cell(args.arch, args.shape, args.mesh, opt_name=args.opt)
     print(json.dumps(rec, indent=1, default=str))
 
 

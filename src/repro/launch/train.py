@@ -5,6 +5,18 @@ distribution); --reduced runs the same code path at CPU scale end-to-end
 (data pipeline -> sharded step -> 4-bit optimizer -> checkpoints).
 
     PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --reduced --steps 30
+
+Production-path flags:
+  --optimizer production4bit   fp32 embeddings/norms + 4-bit SR body
+  --sr-seed N                  thread a stochastic-rounding PRNG key through
+                               the train step (unbiased quantization, Alg. 1)
+  --mesh DxM                   run on a (data=D, model=M) host-device mesh via
+                               jit_train_step with explicit shardings
+  --ckpt-dir PATH              resume is elastic: the restore target is built
+                               abstractly (jax.eval_shape over
+                               make_train_state — no throwaway concrete init,
+                               so restore never doubles device memory) and
+                               re-sharded onto the current mesh.
 """
 
 import argparse
@@ -21,9 +33,15 @@ from repro.core.optimizers import (
     state_nbytes,
 )
 from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.launch.mesh import make_mesh
 from repro.models import init_model
 from repro.train.checkpoint import CheckpointManager, latest_step
-from repro.train.train_loop import build_train_step, make_train_state
+from repro.train.train_loop import (
+    build_train_step,
+    jit_train_step,
+    make_train_state,
+    train_state_shardings,
+)
 
 
 def _parse_value(v: str):
@@ -38,6 +56,39 @@ def _parse_value(v: str):
         return ast.literal_eval(v)
     except (ValueError, SyntaxError):
         return v
+
+
+def _uses_stochastic_rounding(opt_state) -> bool:
+    from repro.core.quantizer import QuantizedTensor
+
+    return any(
+        l.config.stochastic_rounding
+        for l in jax.tree_util.tree_leaves(
+            opt_state, is_leaf=lambda x: isinstance(x, QuantizedTensor)
+        )
+        if isinstance(l, QuantizedTensor)
+    )
+
+
+def abstract_train_state(cfg, optimizer, key=None):
+    """(abstract TrainState, axes) without allocating a single param.
+
+    The whole init (model params -> optimizer state -> TrainState) runs under
+    ``jax.eval_shape``, so every leaf is a ShapeDtypeStruct.  This is the
+    restore target: the old ``jax.eval_shape(lambda: state)`` idiom required
+    a *concrete* state to already exist, which meant a resuming process
+    allocated the full model twice (fresh init + restored copy) before the
+    first could be dropped.
+    """
+    captured = {}
+
+    def build():
+        params, axes = init_model(jax.random.PRNGKey(0), cfg)
+        captured["axes"] = axes
+        return make_train_state(params, optimizer, key=key)
+
+    state_s = jax.eval_shape(build)
+    return state_s, captured["axes"]
 
 
 def main():
@@ -55,6 +106,13 @@ def main():
     ap.add_argument("--batch", type=int, default=8)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--sr-seed", type=int, default=None,
+                    help="seed for the stochastic-rounding PRNG key stream "
+                         "(required for unbiased SR; omit for deterministic "
+                         "round-to-nearest)")
+    ap.add_argument("--mesh", default=None, metavar="DxM",
+                    help="host-device mesh, e.g. 2x4 (data=2, model=4); "
+                         "needs D*M local devices")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
     args = ap.parse_args()
@@ -68,7 +126,11 @@ def main():
             f"{args.arch}: modality-stub arch — use examples/ or the dry-run"
         )
 
-    params, _ = init_model(jax.random.PRNGKey(0), cfg)
+    for kv in args.opt_arg:
+        if "=" not in kv:
+            raise SystemExit(
+                f"--opt-arg {kv!r}: expected K=V (e.g. use_kernel=true)"
+            )
     overrides = {k: _parse_value(v) for k, _, v in
                  (kv.partition("=") for kv in args.opt_arg)}
     opt = make_optimizer(
@@ -76,18 +138,46 @@ def main():
         linear_warmup_linear_decay(args.lr, max(1, args.steps // 10), args.steps),
         **overrides,
     )
-    state = make_train_state(params, opt)
+    sr_key = (
+        jax.random.PRNGKey(args.sr_seed) if args.sr_seed is not None else None
+    )
+
+    mesh = None
+    if args.mesh:
+        d, _, m = args.mesh.partition("x")
+        mesh = make_mesh((int(d), int(m)), ("data", "model"))
+
+    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    start = (latest_step(args.ckpt_dir) or 0) if args.ckpt_dir else 0
+
+    if start:
+        # Elastic resume: abstract target + shardings for the current mesh.
+        target, axes = abstract_train_state(cfg, opt, key=sr_key)
+        shardings = (
+            train_state_shardings(target, axes, mesh) if mesh is not None else None
+        )
+        state, _ = mgr.restore(target, shardings=shardings)
+        print(f"resumed from step {start}")
+    else:
+        params, axes = init_model(jax.random.PRNGKey(0), cfg)
+        state = make_train_state(params, opt, key=sr_key)
     print(f"arch={cfg.name} optimizer={opt.name} "
           f"state_bytes={state_nbytes(state.opt_state):,}")
 
-    step_fn = jax.jit(build_train_step(cfg, opt), donate_argnums=(0,))
-    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
+    if sr_key is None and _uses_stochastic_rounding(state.opt_state):
+        print("warning: optimizer is configured for stochastic rounding but "
+              "no --sr-seed was given — quantization falls back to biased "
+              "round-to-nearest")
 
-    start = (latest_step(args.ckpt_dir) or 0) if args.ckpt_dir else 0
-    if start:
-        state, _ = mgr.restore(jax.eval_shape(lambda: state))
-        print(f"resumed from step {start}")
+    data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
+    if mesh is not None:
+        sample = {k: jnp.asarray(v) for k, v in data.batch_at(start).items()}
+        step_fn = jit_train_step(
+            build_train_step(cfg, opt, mesh, axes, zero=True),
+            state, sample, axes, mesh,
+        )
+    else:
+        step_fn = jax.jit(build_train_step(cfg, opt), donate_argnums=(0,))
 
     for t in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}

@@ -109,14 +109,19 @@ def opt_state_shardings(opt_state, params, axes, mesh: Mesh, zero: bool = True):
     and other scalars are replicated; unrecognized leaves fall back to
     replicated.
     """
-    from repro.core.optimizers.transform import ChainState
+    from repro.core.optimizers.transform import ChainState, MaskedNode, PartitionState
 
     treedef = jax.tree_util.tree_structure(params)
     p_leaves = jax.tree_util.tree_leaves(params)
     a_leaves = jax.tree_util.tree_leaves(axes, is_leaf=_IS_AXES_LEAF)
 
     def _mirror_leaves(sub):
-        """State subtrees at param-leaf positions, or None if not a mirror."""
+        """State subtrees at param-leaf positions, or None if not a mirror.
+
+        ``MaskedNode`` leaves (partitioned states: positions owned by another
+        partition) count as mirroring — they flatten to nothing, so the
+        sharding tree just carries a matching ``MaskedNode`` placeholder.
+        """
         try:
             s_leaves = treedef.flatten_up_to(sub)
         except (ValueError, TypeError, KeyError):
@@ -124,6 +129,8 @@ def opt_state_shardings(opt_state, params, axes, mesh: Mesh, zero: bool = True):
         if len(s_leaves) != len(p_leaves):
             return None
         for p, s in zip(p_leaves, s_leaves):
+            if isinstance(s, MaskedNode):
+                continue
             if isinstance(s, (QuantizedTensor, FactoredMoment)):
                 if tuple(s.shape) != tuple(p.shape):
                     return None
@@ -142,12 +149,18 @@ def opt_state_shardings(opt_state, params, axes, mesh: Mesh, zero: bool = True):
             return jax.tree_util.tree_unflatten(
                 treedef,
                 [
-                    _state_leaf_shardings(p, a, s, mesh, zero)
+                    s
+                    if isinstance(s, MaskedNode)
+                    else _state_leaf_shardings(p, a, s, mesh, zero)
                     for p, a, s in zip(p_leaves, a_leaves, s_leaves)
                 ],
             )
         if isinstance(sub, ChainState):
             return ChainState(walk(s) for s in sub.states)
+        if isinstance(sub, PartitionState):
+            return PartitionState(
+                {lab: walk(s) for lab, s in sub.states.items()}, sub.param_paths
+            )
         if isinstance(sub, tuple) and hasattr(sub, "_fields"):  # NamedTuple state
             return type(sub)(*(walk(v) for v in sub))
         if isinstance(sub, dict):

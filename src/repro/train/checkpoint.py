@@ -10,8 +10,17 @@ from the same files.
 Layout:
     <dir>/step_000100/
         arrays.npz            # every array leaf, keyed by flattened path
-        manifest.json         # treedef repr, shapes, dtypes, sha256 per leaf
+        manifest.json         # structure (treedef repr) + per-leaf key,
+                              # shape, dtype, sha256
     <dir>/LATEST              # atomically-updated pointer
+
+The manifest's ``structure`` entry records the full pytree structure —
+including the optimizer transform-chain layout (``ChainState`` /
+``CompressedState`` / ``PartitionState`` nesting, per-leaf ``QuantConfig``) —
+so a restore into a structurally different target fails loudly with both
+reprs instead of silently misassigning leaves.  ``migrate_legacy_state``
+converts pre-chain ``{"m": ..., "v": ..., "step": ...}`` dict states into the
+``ChainState`` layout a transform chain expects.
 """
 
 from __future__ import annotations
@@ -31,9 +40,25 @@ import numpy as np
 from repro.core.optimizers.base import FactoredMoment
 from repro.core.quantizer import QuantizedTensor
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step", "CheckpointManager"]
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "CheckpointManager",
+    "tree_structure_repr",
+    "migrate_legacy_state",
+]
 
 _STATE_LEAF = lambda x: isinstance(x, (QuantizedTensor, FactoredMoment))
+
+
+def tree_structure_repr(tree) -> str:
+    """Canonical structure string for manifest validation.
+
+    The treedef repr covers node types, arity, dict keys, and static aux data
+    — for optimizer states that includes the transform-chain nesting and each
+    ``QuantizedTensor``'s ``QuantConfig``."""
+    return str(jax.tree_util.tree_structure(tree))
 
 
 def _flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
@@ -61,6 +86,7 @@ def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[Dict] 
         manifest = {
             "step": step,
             "extra": extra or {},
+            "structure": tree_structure_repr(tree),
             "leaves": [
                 {
                     "key": key,
@@ -117,6 +143,19 @@ def restore_checkpoint(
     manifest = json.load(open(os.path.join(d, "manifest.json")))
     npz = np.load(os.path.join(d, "arrays.npz"))
 
+    if validate and "structure" in manifest:
+        got = tree_structure_repr(target)
+        if got != manifest["structure"]:
+            raise ValueError(
+                "checkpoint structure mismatch: the restore target's pytree "
+                "does not match what was saved.\n"
+                f"  saved:  {manifest['structure'][:512]}\n"
+                f"  target: {got[:512]}\n"
+                "If the checkpoint predates the transform-chain state layout "
+                "(dict {'m','v','step'}), restore into the legacy structure "
+                "and convert with migrate_legacy_state(state, tx)."
+            )
+
     flat_target = jax.tree_util.tree_flatten_with_path(target)
     paths = [jax.tree_util.keystr(p) for p, _ in flat_target[0]]
     by_key = {m["key"]: m for m in manifest["leaves"]}
@@ -126,6 +165,14 @@ def restore_checkpoint(
         sh_leaves = jax.tree_util.tree_leaves(
             shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
         )
+        if len(sh_leaves) != len(paths):
+            # tree_leaves drops None subtrees, which would silently shift
+            # every later leaf onto the wrong sharding — refuse instead.
+            raise ValueError(
+                f"shardings tree has {len(sh_leaves)} sharding leaves but the "
+                f"target has {len(paths)} array leaves; shardings must mirror "
+                "the target one sharding per leaf (no None placeholders)"
+            )
 
     out = []
     for i, key in enumerate(paths):
@@ -143,6 +190,105 @@ def restore_checkpoint(
         jax.tree_util.tree_structure(target), out
     )
     return tree, manifest["extra"]
+
+
+def migrate_legacy_state(dict_state: Dict, tx, field_map: Optional[Dict[str, str]] = None):
+    """Convert a pre-chain dict optimizer state into ``ChainState`` layout.
+
+    ``dict_state`` is the legacy layout (``{"m": <tree>, "v": <tree>,
+    "step": <int32>}`` for AdamW-family; SGDM's momentum lived under ``"m"``),
+    with moment leaves raw fp32, ``QuantizedTensor`` or ``FactoredMoment``.
+    ``tx`` is the transform chain (or ``Optimizer`` facade) the state should
+    feed — it must be built with the same quantization policies the legacy
+    run used, which is checked structurally per moment tree.
+
+    Returns ``tx.init``'s state with every moment tree replaced by the legacy
+    values and every transform step counter set to the legacy ``"step"``
+    (bias correction and schedules continue where the old run stopped).
+    ``field_map`` renames legacy keys to chain state fields; the one rename
+    the repo's own history needs (SGDM ``"m"`` -> ``"trace"``) is applied
+    automatically.
+    """
+    from repro.core.optimizers.transform import ChainState
+
+    moments = {k: v for k, v in dict_state.items() if k != "step"}
+    if not moments:
+        raise ValueError("legacy state has no moment trees to migrate")
+    step_val = dict_state.get("step")
+
+    # Rebuild a param-shaped tree of zeros from any moment tree: every leaf
+    # kind (raw array / QuantizedTensor / FactoredMoment) knows its logical
+    # shape, which is all ``init`` needs to re-derive structure + policies.
+    template = next(iter(moments.values()))
+    params_like = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(tuple(s.shape), jnp.float32), template, is_leaf=_STATE_LEAF
+    )
+    new_state = tx.init(params_like)
+    if not isinstance(new_state, ChainState):
+        raise TypeError(
+            f"migrate_legacy_state targets ChainState layouts, got {type(new_state).__name__}"
+        )
+
+    field_map = dict(field_map or {})
+    chain_fields = _namedtuple_fields(new_state)
+    for k in list(moments):
+        tgt = field_map.get(k, k)
+        if tgt not in chain_fields and k == "m" and "trace" in chain_fields:
+            tgt = "trace"  # SGDM momentum was renamed by the chain refactor
+        field_map[k] = tgt
+    unknown = [k for k, tgt in field_map.items() if k in moments and tgt not in chain_fields]
+    if unknown:
+        raise ValueError(
+            f"legacy field(s) {sorted(unknown)} have no matching state field in "
+            f"the target chain (available: {sorted(chain_fields)})"
+        )
+    by_field = {field_map[k]: v for k, v in moments.items()}
+
+    def graft(node):
+        if isinstance(node, ChainState):
+            return ChainState(graft(s) for s in node.states)
+        if isinstance(node, tuple) and hasattr(node, "_fields"):
+            repl = {}
+            for f in node._fields:
+                v = getattr(node, f)
+                if f in by_field:
+                    want = jax.tree_util.tree_structure(v)
+                    got = jax.tree_util.tree_structure(by_field[f])
+                    if want != got:
+                        raise ValueError(
+                            f"legacy moment {f!r} does not match the target "
+                            "chain's state structure — was the chain built "
+                            "with the same quantization policies?\n"
+                            f"  target: {str(want)[:300]}\n"
+                            f"  legacy: {str(got)[:300]}"
+                        )
+                    repl[f] = by_field[f]
+                elif f == "count" and step_val is not None:
+                    repl[f] = jnp.asarray(step_val, jnp.int32)
+                else:
+                    repl[f] = graft(v)
+            return node._replace(**repl)
+        return node
+
+    return graft(new_state)
+
+
+def _namedtuple_fields(node, acc=None) -> set:
+    """All NamedTuple field names reachable in a state tree (not leaves)."""
+    from repro.core.optimizers.transform import ChainState
+
+    acc = set() if acc is None else acc
+    if isinstance(node, ChainState):
+        for s in node.states:
+            _namedtuple_fields(s, acc)
+    elif isinstance(node, tuple) and hasattr(node, "_fields"):
+        acc.update(node._fields)
+        for v in node:
+            _namedtuple_fields(v, acc)
+    elif isinstance(node, (tuple, list)):
+        for v in node:
+            _namedtuple_fields(v, acc)
+    return acc
 
 
 class CheckpointManager:

@@ -37,17 +37,33 @@ __all__ = ["TrainState", "build_train_step", "make_train_state", "train_state_sh
 _IS_AXES_LEAF = lambda a: isinstance(a, tuple) and all(isinstance(s, str) for s in a)
 
 
-@jax.tree_util.register_pytree_node_class
+@jax.tree_util.register_pytree_with_keys_class
 class TrainState:
-    """params (fp32 masters) + compressed optimizer state + step counter."""
+    """params (fp32 masters) + compressed optimizer state + step counter +
+    optional stochastic-rounding base PRNG key.
 
-    def __init__(self, params, opt_state, step):
+    ``key`` is the *base* key: every step re-derives its SR key as
+    ``fold_in(key, step)``, so the key stream is a pure function of
+    (base key, step counter) and a checkpoint restore reproduces the exact
+    same quantization noise as the uninterrupted run — bit-exact resume even
+    under stochastic rounding.  ``key=None`` (the default) trains without SR
+    randomness (round-to-nearest quantization everywhere).
+    """
+
+    def __init__(self, params, opt_state, step, key=None):
         self.params = params
         self.opt_state = opt_state
         self.step = step
+        self.key = key
 
-    def tree_flatten(self):
-        return (self.params, self.opt_state, self.step), ()
+    def tree_flatten_with_keys(self):
+        k = jax.tree_util.GetAttrKey
+        return (
+            (k("params"), self.params),
+            (k("opt_state"), self.opt_state),
+            (k("step"), self.step),
+            (k("key"), self.key),
+        ), ()
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -61,9 +77,12 @@ def _coerce_optimizer(optimizer) -> Optimizer:
     return optimizer
 
 
-def make_train_state(params, optimizer) -> TrainState:
+def make_train_state(params, optimizer, key: Optional[jax.Array] = None) -> TrainState:
+    """``key`` seeds stochastic rounding (see ``TrainState``); pass one for
+    ``adamw4bit(stochastic_rounding=True)`` / ``sgdm4bit`` / ``production4bit``.
+    It is harmless for deterministic optimizers (they ignore it)."""
     optimizer = _coerce_optimizer(optimizer)
-    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32))
+    return TrainState(params, optimizer.init(params), jnp.zeros((), jnp.int32), key)
 
 
 def train_state_shardings(state, axes, mesh: Mesh, zero: bool = True):
@@ -71,6 +90,7 @@ def train_state_shardings(state, axes, mesh: Mesh, zero: bool = True):
         params=param_shardings(state.params, axes, mesh, zero=zero),
         opt_state=opt_state_shardings(state.opt_state, state.params, axes, mesh, zero=zero),
         step=replicated(mesh),
+        key=None if state.key is None else replicated(mesh),
     )
 
 
@@ -105,7 +125,10 @@ def build_train_step(
 
     ``accum_steps > 1`` splits the batch leading dim into microbatches and
     accumulates gradients in fp32 (scan over microbatches — peak activation
-    memory drops by the accumulation factor)."""
+    memory drops by the accumulation factor).  The microbatch loop itself is
+    deterministic (the loss consumes no randomness); stochastic rounding
+    happens once, at the post-accumulation optimizer update, keyed by
+    ``fold_in(state.key, state.step)`` when ``state.key`` is set."""
     optimizer = _coerce_optimizer(optimizer)
 
     def compute_grads(params, batch):
@@ -145,24 +168,37 @@ def build_train_step(
                 g_acc, loss_acc = carry
                 loss, metrics, grads = compute_grads(params, micro(batch, i))
                 g_acc = jax.tree_util.tree_map(jnp.add, g_acc, grads)
-                return (g_acc, loss_acc + loss), None
+                return (g_acc, loss_acc + loss), metrics
 
             g0 = jax.tree_util.tree_map(
                 lambda p: jnp.zeros(p.shape, jnp.float32), params
             )
-            (grads, loss_sum), _ = jax.lax.scan(
+            (grads, loss_sum), metrics_stacked = jax.lax.scan(
                 body, (g0, jnp.float32(0)), jnp.arange(accum_steps)
             )
             grads = jax.tree_util.tree_map(lambda g: g / accum_steps, grads)
             loss = loss_sum / accum_steps
-            metrics = {"ce_loss": loss, "aux_loss": jnp.float32(0)}
+            # real per-microbatch metrics, averaged (not total loss relabeled
+            # as ce_loss with aux zeroed)
+            metrics = jax.tree_util.tree_map(
+                lambda x: jnp.mean(x, axis=0), metrics_stacked
+            )
         else:
             loss, metrics, grads = compute_grads(params, batch)
 
         if mesh is not None and zero and axes is not None:
             grads = _constrain_grads_zero(grads, params, axes, mesh, grad_dtype)
 
-        new_params, new_opt = optimizer.update(grads, state.opt_state, params)
+        if state.key is not None:
+            # Per-step SR key: a pure function of (base key, step) so a
+            # restored run re-derives the identical key stream.  compressed()
+            # folds in the leaf index (and splits per moment) downstream.
+            step_key = jax.random.fold_in(state.key, state.step)
+            new_params, new_opt = optimizer.update(
+                grads, state.opt_state, params, key=step_key
+            )
+        else:
+            new_params, new_opt = optimizer.update(grads, state.opt_state, params)
         metrics = dict(metrics)
         metrics["loss"] = loss
         metrics["grad_norm"] = jnp.sqrt(
@@ -171,7 +207,7 @@ def build_train_step(
                 for g in jax.tree_util.tree_leaves(grads)
             )
         )
-        return TrainState(new_params, new_opt, state.step + 1), metrics
+        return TrainState(new_params, new_opt, state.step + 1, state.key), metrics
 
     return train_step
 

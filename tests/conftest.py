@@ -1,0 +1,14 @@
+"""Test-process setup.
+
+Forces 8 host (CPU) devices BEFORE any jax import so mesh/sharding tests can
+exercise real multi-device layouts (2x4, 4x2, 8x1) in-process.  Single-device
+tests are unaffected: unsharded computations run on device 0 as before.
+"""
+
+import os
+
+if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=8"
+    ).strip()

@@ -1,0 +1,288 @@
+"""End-to-end checkpoint round-trips for every registered optimizer.
+
+The enforced invariant: ``make_train_state -> 3 steps -> save -> restore ->
+3 more steps`` is BIT-IDENTICAL to 6 uninterrupted steps — params, step
+counters, the SR key, and every compressed state leaf (packed 4-bit codes and
+their scales).  Under stochastic rounding this additionally proves the SR key
+stream is a pure function of (base key, step): the restored run re-derives
+the identical quantization noise.
+
+Also covers: multi-device mesh resume (fresh mesh instance + explicit
+shardings), elastic restore onto a different mesh layout, the manifest
+structure guard, and legacy dict-state migration.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from legacy_optimizers import legacy_quantized_adamw
+from repro.core.optimizers import (
+    QuantPolicy,
+    adamw4bit,
+    adamw8bit,
+    make_optimizer,
+    optimizer_names,
+    sgdm4bit,
+)
+from repro.core.optimizers.adamw import M_4BIT, V_4BIT
+from repro.core.optimizers.transform import ChainState
+from repro.core.quantizer import QuantizedTensor
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import LayerSpec, ModelConfig, init_model
+from repro.train.checkpoint import (
+    migrate_legacy_state,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.train_loop import (
+    build_train_step,
+    jit_train_step,
+    make_train_state,
+    train_state_shardings,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+MICRO_CFG = ModelConfig(
+    name="micro-lm",
+    num_layers=1,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=128,
+    vocab_size=256,  # embed = 256*64 = 16384 elements > threshold -> quantized
+    blocks=(LayerSpec("dense", 0),),
+    remat=False,
+)
+
+_DATA = SyntheticLM(DataConfig(MICRO_CFG.vocab_size, 16, 8, seed=2))
+
+
+def _batch(t):
+    return {k: jnp.asarray(v) for k, v in _DATA.batch_at(t).items()}
+
+
+def _assert_states_bitwise(a, b, what=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{what}: tree structure mismatch"
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+CASES = [(name, {}) for name in optimizer_names()]
+CASES.append(("adamw4bit", {"stochastic_rounding": True}))
+CASE_IDS = [n for n, _ in CASES[:-1]] + ["adamw4bit_sr"]
+
+
+@pytest.mark.parametrize("name,overrides", CASES, ids=CASE_IDS)
+def test_roundtrip_bit_identical_all_optimizers(name, overrides, tmp_path):
+    opt = make_optimizer(name, 3e-3, **overrides)
+    params, _ = init_model(jax.random.PRNGKey(0), MICRO_CFG)
+    key = jax.random.PRNGKey(5)  # harmless for RTN optimizers, load-bearing for SR
+    state = make_train_state(params, opt, key=key)
+    step_fn = jax.jit(build_train_step(MICRO_CFG, opt))
+
+    for t in range(3):
+        state, _ = step_fn(state, _batch(t))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, state)
+
+    uninterrupted = state
+    for t in range(3, 6):
+        uninterrupted, _ = step_fn(uninterrupted, _batch(t))
+
+    # restore on a "fresh process": abstract target, no concrete reuse
+    target = jax.eval_shape(lambda: make_train_state(params, opt, key=key))
+    restored, _ = restore_checkpoint(d, target)
+    _assert_states_bitwise(restored, state, f"{name}: restored state @3")
+    for t in range(3, 6):
+        restored, _ = step_fn(restored, _batch(t))
+    _assert_states_bitwise(
+        restored, uninterrupted, f"{name}: resumed vs uninterrupted @6"
+    )
+
+
+def _mesh_step(opt, mesh, axes, state):
+    train_step = build_train_step(MICRO_CFG, opt, mesh, axes, zero=True)
+    return jit_train_step(train_step, state, _batch(0), axes, mesh, donate=False)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize(
+    "name,overrides",
+    [("adamw4bit", {"stochastic_rounding": True}), ("production4bit", {})],
+    ids=["adamw4bit_sr", "production4bit"],
+)
+def test_mesh_resume_bit_exact(name, overrides, tmp_path):
+    """SR training under pjit on a 2x4 host mesh: save -> restore onto a
+    FRESH mesh (new Mesh object, new jit) with explicit shardings -> continue
+    == uninterrupted, bit-exactly."""
+    opt = make_optimizer(name, 3e-3, **overrides)
+    params, axes = init_model(jax.random.PRNGKey(0), MICRO_CFG)
+    key = jax.random.PRNGKey(11)
+
+    mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+    state = make_train_state(params, opt, key=key)
+    step1 = _mesh_step(opt, mesh1, axes, state)
+    for t in range(3):
+        state, metrics = step1(state, _batch(t))
+    assert np.isfinite(float(metrics["loss"]))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, state)
+    uninterrupted = state
+    for t in range(3, 6):
+        uninterrupted, _ = step1(uninterrupted, _batch(t))
+
+    # fresh mesh + fresh jit, restore with explicit shardings
+    mesh2 = jax.make_mesh((2, 4), ("data", "model"))
+    target = jax.eval_shape(lambda: make_train_state(params, opt, key=key))
+    shardings = train_state_shardings(target, axes, mesh2, zero=True)
+    restored, _ = restore_checkpoint(d, target, shardings=shardings)
+    step2 = _mesh_step(opt, mesh2, axes, restored)
+    for t in range(3, 6):
+        restored, _ = step2(restored, _batch(t))
+    _assert_states_bitwise(restored, uninterrupted, f"{name}: mesh resume @6")
+
+
+@pytest.mark.slow
+def test_elastic_restore_different_mesh_layout(tmp_path):
+    """A checkpoint saved on (2,4) restores and trains on (4,2) — elastic
+    restart across layouts (numerics may differ in reduction order, so this
+    asserts close, not bitwise)."""
+    opt = make_optimizer("production4bit", 3e-3)
+    params, axes = init_model(jax.random.PRNGKey(0), MICRO_CFG)
+    key = jax.random.PRNGKey(11)
+    mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+    state = make_train_state(params, opt, key=key)
+    step1 = _mesh_step(opt, mesh1, axes, state)
+    for t in range(2):
+        state, _ = step1(state, _batch(t))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 2, state)
+    ref, _ = step1(state, _batch(2))
+
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    target = jax.eval_shape(lambda: make_train_state(params, opt, key=key))
+    shardings = train_state_shardings(target, axes, mesh2, zero=True)
+    restored, _ = restore_checkpoint(d, target, shardings=shardings)
+    step2 = _mesh_step(opt, mesh2, axes, restored)
+    cont, metrics = step2(restored, _batch(2))
+    assert np.isfinite(float(metrics["loss"]))
+    for a, b in zip(
+        jax.tree_util.tree_leaves(ref.params), jax.tree_util.tree_leaves(cont.params)
+    ):
+        # Different layout => different reduction order.  Near a 4-bit code
+        # boundary that can flip a single quantized-state element by one bin,
+        # so bound the outlier fraction and magnitude instead of demanding
+        # uniform closeness.
+        diff = np.abs(np.asarray(a) - np.asarray(b))
+        assert float(np.mean(diff > 5e-4)) < 1e-3, float(np.mean(diff > 5e-4))
+        assert float(diff.max()) < 5e-3, float(diff.max())
+
+
+def test_restore_rejects_structure_mismatch(tmp_path):
+    """The manifest records the transform-chain structure; restoring into a
+    different optimizer's state fails loudly, not by leaf misassignment."""
+    params, _ = init_model(jax.random.PRNGKey(0), MICRO_CFG)
+    state = make_train_state(params, make_optimizer("adamw4bit", 1e-3))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, state)
+    wrong = jax.eval_shape(
+        lambda: make_train_state(params, make_optimizer("adamw32", 1e-3))
+    )
+    with pytest.raises(ValueError, match="structure mismatch"):
+        restore_checkpoint(d, wrong)
+
+
+# ---------------------------------------------------------------------------
+# legacy dict-state migration
+# ---------------------------------------------------------------------------
+
+
+def _legacy_params():
+    rng = np.random.default_rng(3)
+    f32 = lambda a: jnp.asarray(a.astype(np.float32))
+    return {
+        "embed": f32(rng.normal(size=(64, 256)) * 0.1),
+        "w": f32(rng.normal(size=(16, 512)) * 0.1),
+        "bias": f32(rng.normal(size=(64,)) * 0.1),
+    }
+
+
+def _legacy_grads(t, params):
+    rng = np.random.default_rng(100 + t)
+    return jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape).astype(np.float32) * 0.02),
+        params,
+    )
+
+
+def test_migrate_legacy_adamw4bit_state_continues_bit_identical():
+    """legacy run -> migrate_legacy_state -> chain run continues exactly as
+    the legacy optimizer would have (the chain is bit-identical to the legacy
+    oracle, so migration must hand it an equivalent state)."""
+    params = _legacy_params()
+    legacy = legacy_quantized_adamw(
+        3e-3,
+        m_policy=QuantPolicy(config=M_4BIT),
+        v_policy=QuantPolicy(config=V_4BIT),
+    )
+    p_l, s_l = params, legacy.init(params)
+    for t in range(3):
+        p_l, s_l = legacy.update(_legacy_grads(t, params), s_l, p_l)
+
+    new_opt = adamw4bit(3e-3)
+    migrated = migrate_legacy_state(s_l, new_opt)
+    assert isinstance(migrated, ChainState)
+    assert isinstance(migrated["m"]["w"], QuantizedTensor)
+    assert int(np.asarray(migrated[0].count)) == 3
+
+    p_new, s_new = p_l, migrated
+    for t in range(3, 6):
+        g = _legacy_grads(t, params)
+        p_l, s_l = legacy.update(g, s_l, p_l)
+        p_new, s_new = new_opt.update(g, s_new, p_new)
+    _assert_states_bitwise(p_new, p_l, "migrated chain vs legacy params")
+    _assert_states_bitwise(s_new["m"], s_l["m"], "migrated m")
+    _assert_states_bitwise(s_new["v"], s_l["v"], "migrated v")
+
+
+def test_migrate_legacy_state_validates_policies():
+    """Migrating a 4-bit legacy state into an 8-bit chain must fail loudly
+    (the quantizer configs are part of the state structure)."""
+    params = _legacy_params()
+    legacy = legacy_quantized_adamw(
+        1e-3,
+        m_policy=QuantPolicy(config=M_4BIT),
+        v_policy=QuantPolicy(config=V_4BIT),
+    )
+    s_l = legacy.init(params)
+    with pytest.raises(ValueError, match="quantization policies"):
+        migrate_legacy_state(s_l, adamw8bit(1e-3))
+
+
+def test_migrate_legacy_sgdm_renames_m_to_trace():
+    from legacy_optimizers import legacy_sgdm4bit
+
+    params = _legacy_params()
+    legacy = legacy_sgdm4bit(5e-3)
+    key = jax.random.PRNGKey(9)
+    p_l, s_l = params, legacy.init(params)
+    for t in range(2):
+        p_l, s_l = legacy.update(
+            _legacy_grads(t, params), s_l, p_l, key=jax.random.fold_in(key, t)
+        )
+    new_opt = sgdm4bit(5e-3)
+    migrated = migrate_legacy_state(s_l, new_opt)
+    _assert_states_bitwise(migrated["trace"], s_l["m"], "sgdm trace")
+    p_new, s_new = p_l, migrated
+    for t in range(2, 4):
+        g = _legacy_grads(t, params)
+        k = jax.random.fold_in(key, t)
+        p_l, s_l = legacy.update(g, s_l, p_l, key=k)
+        p_new, s_new = new_opt.update(g, s_new, p_new, key=k)
+    _assert_states_bitwise(p_new, p_l, "migrated sgdm params")

@@ -1,0 +1,167 @@
+"""partition() label-routing edge cases + sharding of partitioned states.
+
+Covers the production-preset failure modes: a param added after init must
+raise (KeyError — not silently train with missing state), empty partitions
+must be legal (a label no leaf maps to), and ``opt_state_shardings`` must
+mirror a ``PartitionState`` on a real multi-device mesh — quantized body
+leaves sharded like their params (+ZeRO), masked positions preserved.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding
+
+from repro.core.optimizers import (
+    QuantPolicy,
+    as_optimizer,
+    label_by_regex,
+    make_optimizer,
+    partition,
+    production4bit,
+)
+from repro.core.optimizers.adamw import M_4BIT, V_4BIT, adamw_chain
+from repro.core.optimizers.transform import MaskedNode, PartitionState
+from repro.core.quantizer import QuantizedTensor
+from repro.sharding.specs import opt_state_shardings
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params():
+    rng = np.random.default_rng(0)
+    f32 = lambda a: jnp.asarray(a.astype(np.float32))
+    return {
+        "embed": f32(rng.normal(size=(64, 256)) * 0.1),
+        "body": f32(rng.normal(size=(16, 512)) * 0.1),
+        "bias": f32(rng.normal(size=(64,)) * 0.1),
+    }
+
+
+def _grads(params, t=0):
+    rng = np.random.default_rng(50 + t)
+    return jax.tree_util.tree_map(
+        lambda p: jnp.asarray(rng.normal(size=p.shape).astype(np.float32) * 0.02),
+        params,
+    )
+
+
+def _prod_tx():
+    return partition(
+        {
+            "fp32": adamw_chain(1e-3),
+            "4bit": adamw_chain(
+                1e-3,
+                m_policy=QuantPolicy(config=M_4BIT),
+                v_policy=QuantPolicy(config=V_4BIT),
+            ),
+        },
+        label_by_regex(("embed", "bias"), "fp32", "4bit"),
+    )
+
+
+def test_param_added_after_init_raises_keyerror():
+    tx = _prod_tx()
+    params = _params()
+    state = tx.init(params)
+    grown = dict(params, new_adapter=jnp.zeros((8, 512), jnp.float32))
+    with pytest.raises(KeyError, match="new_adapter"):
+        tx.update(_grads(grown), state, grown)
+
+
+def test_param_removed_after_init_raises_keyerror():
+    tx = _prod_tx()
+    params = _params()
+    state = tx.init(params)
+    shrunk = {k: v for k, v in params.items() if k != "body"}
+    with pytest.raises(KeyError, match="body"):
+        tx.update(_grads(shrunk), state, shrunk)
+
+
+def test_empty_partition_is_legal():
+    """A transform whose label matches no leaf must init and update cleanly
+    (e.g. a preset whose fp32 patterns miss a headless model)."""
+    tx = partition(
+        {
+            "a": adamw_chain(1e-3),
+            "unused": adamw_chain(1e-3),
+        },
+        lambda path, p: "a",
+    )
+    params = _params()
+    state = tx.init(params)
+    assert jax.tree_util.tree_leaves(state.states["unused"]) != []  # counts remain
+    u, state2 = tx.update(_grads(params), state, params)
+    assert len(jax.tree_util.tree_leaves(u)) == len(jax.tree_util.tree_leaves(params))
+    # masked placeholders stayed placeholders
+    assert isinstance(state2, PartitionState)
+
+
+def test_partition_state_roundtrips_tree_ops():
+    """PartitionState (keyed pytree with static label/path aux) must survive
+    tree_map + eval_shape with structure intact (jit in_shardings needs it)."""
+    tx = _prod_tx()
+    params = _params()
+    state = tx.init(params)
+    mapped = jax.tree_util.tree_map(lambda x: x, state)
+    assert jax.tree_util.tree_structure(mapped) == jax.tree_util.tree_structure(state)
+    s_shape = jax.eval_shape(lambda: tx.init(params))
+    assert jax.tree_util.tree_structure(s_shape) == jax.tree_util.tree_structure(state)
+    assert mapped.param_paths == state.param_paths
+
+
+def test_opt_state_shardings_partitioned_state_on_8dev_mesh():
+    """On a real (2, 4) host mesh: quantized body codes shard like the param
+    (+ZeRO over data), fp32-partition moments shard too, masked positions are
+    preserved, and the sharding tree structure matches the state exactly."""
+    assert jax.device_count() >= 8, "conftest should force 8 host devices"
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    params = _params()
+    axes = {
+        "embed": ("vocab", "embed"),
+        "body": ("heads", "mlp"),
+        "bias": ("embed",),
+    }
+    opt = production4bit(1e-3, fp32_patterns=("embed", "bias"))
+    state = opt.init(params)
+    sh = opt_state_shardings(state, params, axes, mesh, zero=True)
+
+    assert jax.tree_util.tree_structure(sh) == jax.tree_util.tree_structure(state)
+    assert all(isinstance(l, NamedSharding) for l in jax.tree_util.tree_leaves(sh))
+
+    # 4-bit partition: body momentum is quantized; its codes must NOT be
+    # fully replicated (param spec + ZeRO survives into the codes sharding)
+    m_4bit = sh.states["4bit"].states[0].inner.m
+    assert isinstance(state.states["4bit"].states[0].inner.m["body"], QuantizedTensor)
+    codes_spec = m_4bit["body"].codes.spec
+    assert any(e is not None for e in codes_spec), codes_spec
+    # masked position: the embed leaf belongs to the fp32 partition
+    assert isinstance(m_4bit["embed"], MaskedNode)
+    # fp32 partition: raw embed moment sharded (not replicated) under ZeRO
+    m_fp32 = sh.states["fp32"].states[0].inner.m
+    assert any(e is not None for e in m_fp32["embed"].spec), m_fp32["embed"].spec
+
+
+def test_production4bit_jits_on_mesh():
+    """The preset's update must lower under jit with sharded inputs."""
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    params = _params()
+    opt = production4bit(1e-3)
+    state = opt.init(params)
+    g = _grads(params)
+    p1, s1 = opt.update(g, state, params, key=jax.random.PRNGKey(0))
+    with mesh:
+        p2, s2 = jax.jit(opt.update, static_argnames=())(
+            g, state, params, key=jax.random.PRNGKey(0)
+        )
+    for a, b in zip(jax.tree_util.tree_leaves(p1), jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
+
+
+def test_make_optimizer_production4bit_overrides():
+    opt = make_optimizer("production4bit", 1e-3, weight_decay=0.1,
+                         stochastic_rounding=False)
+    assert opt.name == "production4bit"
+    with pytest.raises(ValueError, match="does not accept"):
+        make_optimizer("production4bit", 1e-3, exclude_embeddings=True)

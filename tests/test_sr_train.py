@@ -1,0 +1,132 @@
+"""Stochastic rounding at the *train-step* level (not just the quantizer).
+
+Step 1 of a fresh run compresses the first moments with SR; step 2 consumes
+the dequantized states — so after two steps the params carry exactly one
+round of quantization noise.  Averaging the 2-step params over many base
+keys must converge to the rounding-free (fp32-state) trajectory: SR is
+unbiased (Alg. 1 / Assumption 4), so the mean bias shrinks like 1/sqrt(N)
+while a single run's deviation does not.
+
+Also enforced: the key actually reaches the quantizer through the whole
+``TrainState -> build_train_step -> compressed()`` stack (different keys =>
+different packed codes), and the stream is deterministic (same key =>
+bit-exact replay).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizers import make_optimizer
+from repro.core.quantizer import QuantizedTensor
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models import LayerSpec, ModelConfig, init_model
+from repro.train.train_loop import build_train_step, make_train_state
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(
+    name="sr-lm",
+    num_layers=1,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=128,
+    vocab_size=256,
+    blocks=(LayerSpec("dense", 0),),
+    remat=False,
+)
+
+_DATA = SyntheticLM(DataConfig(CFG.vocab_size, 16, 8, seed=4))
+
+
+def _batch(t):
+    return {k: jnp.asarray(v) for k, v in _DATA.batch_at(t).items()}
+
+
+_STEP_CACHE = {}
+
+
+def _run_two_steps(opt, params, key, cache_key):
+    # one compile per distinct optimizer config — the 48-key sweep reuses it
+    if cache_key not in _STEP_CACHE:
+        _STEP_CACHE[cache_key] = jax.jit(build_train_step(CFG, opt))
+    step_fn = _STEP_CACHE[cache_key]
+    state = make_train_state(params, opt, key=key)
+    for t in range(2):
+        state, _ = step_fn(state, _batch(t))
+    return state
+
+
+@pytest.fixture(scope="module")
+def sr_runs():
+    """(params, fp32-reference embed, SR embeds over N keys, RTN embed)."""
+    params, _ = init_model(jax.random.PRNGKey(0), CFG)
+    # reference: identical chain with raw fp32 momentum (rounding-free)
+    ref = _run_two_steps(make_optimizer("sgdm", 5e-2), params, None, "sgdm")
+    opt_sr = make_optimizer("sgdm4bit", 5e-2)
+    embeds = [
+        np.asarray(
+            _run_two_steps(
+                opt_sr, params, jax.random.PRNGKey(i), "sgdm4bit_sr"
+            ).params["embed"]
+        )
+        for i in range(48)
+    ]
+    rtn = _run_two_steps(
+        make_optimizer("sgdm4bit", 5e-2, stochastic_rounding=False),
+        params, None, "sgdm4bit_rtn",
+    )
+    return params, np.asarray(ref.params["embed"]), embeds, np.asarray(
+        rtn.params["embed"]
+    )
+
+
+def test_sr_mean_update_converges_to_rounding_free(sr_runs):
+    _, ref, embeds, _ = sr_runs
+    single_dev = float(np.mean([np.abs(e - ref).mean() for e in embeds]))
+    assert single_dev > 0, "SR produced no quantization noise — key not plumbed?"
+    mean_bias = float(np.abs(np.mean(embeds, axis=0) - ref).mean())
+    # unbiased => averaging 48 keys shrinks the error ~7x; 0.3 leaves slack
+    assert mean_bias < 0.3 * single_dev, (mean_bias, single_dev)
+
+
+def test_sr_mean_beats_round_to_nearest(sr_runs):
+    """RTN carries a systematic rounding bias the SR average does not."""
+    _, ref, embeds, rtn = sr_runs
+    mean_bias = float(np.abs(np.mean(embeds, axis=0) - ref).mean())
+    rtn_bias = float(np.abs(rtn - ref).mean())
+    assert mean_bias < rtn_bias, (mean_bias, rtn_bias)
+
+
+def test_sr_keys_decorrelate_and_reproduce(sr_runs):
+    params = sr_runs[0]
+    opt = make_optimizer("adamw4bit", 3e-3, stochastic_rounding=True)
+
+    s_a = _run_two_steps(opt, params, jax.random.PRNGKey(0), "adamw4bit_sr")
+    s_b = _run_two_steps(opt, params, jax.random.PRNGKey(1), "adamw4bit_sr")
+    s_a2 = _run_two_steps(opt, params, jax.random.PRNGKey(0), "adamw4bit_sr")
+
+    m_a = s_a.opt_state["m"]["embed"]
+    m_b = s_b.opt_state["m"]["embed"]
+    assert isinstance(m_a, QuantizedTensor)
+    # different base keys -> different SR noise in the packed codes
+    assert not np.array_equal(np.asarray(m_a.codes), np.asarray(m_b.codes))
+    # same base key -> the entire TrainState replays bit-exactly
+    for x, y in zip(
+        jax.tree_util.tree_leaves(s_a), jax.tree_util.tree_leaves(s_a2)
+    ):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_sr_noop_without_key():
+    """No key in TrainState => deterministic RTN fallback (two SR-configured
+    runs without keys are bit-identical)."""
+    params, _ = init_model(jax.random.PRNGKey(0), CFG)
+    opt = make_optimizer("adamw4bit", 3e-3, stochastic_rounding=True)
+    a = _run_two_steps(opt, params, None, "adamw4bit_sr_nokey")
+    b = _run_two_steps(opt, params, None, "adamw4bit_sr_nokey")
+    for x, y in zip(jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
