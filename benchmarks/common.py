@@ -19,6 +19,9 @@ from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import LayerSpec, ModelConfig, init_model, loss_fn
 from repro.train.train_loop import build_train_step, make_train_state
 
+# d_ff is a multiple of 256 so the mlp w1/w3 leaves (2, 128, 512) satisfy the
+# fused-kernel layout contract — the tab2 fused rows and the production preset
+# actually exercise the Pallas route instead of silently falling back.
 BENCH_CFG = ModelConfig(
     name="bench-lm",
     num_layers=2,
@@ -26,7 +29,7 @@ BENCH_CFG = ModelConfig(
     num_heads=4,
     num_kv_heads=2,
     head_dim=32,
-    d_ff=384,
+    d_ff=512,
     vocab_size=512,
     blocks=(LayerSpec("dense", 0),) * 2,
     remat=False,

@@ -1,0 +1,125 @@
+"""Tracked production-preset drift metrics (ROADMAP drift-tracking item).
+
+``production_metrics()`` distills the benchmark suite's production rows into
+a small deterministic JSON-able dict:
+
+* quality — final loss of ``adamw32`` vs ``production4bit`` (SR seed 0, so
+  the kernel-routed SR body runs with real quantization noise) on the shared
+  bench LM, and their gap.  Fully deterministic on a fixed platform: data,
+  init and SR stream are all seeded.
+* memory — optimizer-state bytes on the GPT-2-Medium-shaped tree
+  (``eval_shape`` only, no allocation) and the production/fp32 ratio.
+  Structural, so it must reproduce exactly anywhere.
+
+``compare()`` checks a freshly computed dict against the tracked baseline
+(``benchmarks/results/baseline.json``) within tolerances; the CI job
+(``scripts_check_drift.py``) fails on violations, catching quality/memory
+regressions of the production preset over time.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import train_small_lm
+from benchmarks.tables import _gpt2m_like_params
+from repro.core.optimizers import make_optimizer, state_nbytes
+
+DEFAULT_STEPS = 80
+SR_SEED = 0
+
+# |gap drift| tolerance in nats: generous enough for BLAS/platform jitter on
+# an 80-step micro-LM, tight enough to catch a real quality regression of the
+# 4-bit body (which shows up as multiples of this on divergence).
+LOSS_GAP_TOL = 0.08
+# memory ratio is structural; anything beyond fp rounding is a layout change
+MEMORY_RATIO_TOL = 1e-3
+
+
+def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
+    """Compute the tracked quality/memory numbers (deterministic per platform)."""
+    r32 = train_small_lm(make_optimizer("adamw32", 3e-3), steps=steps)
+    rprod = train_small_lm(
+        make_optimizer("production4bit", 3e-3), steps=steps, sr_seed=SR_SEED
+    )
+
+    params_s = _gpt2m_like_params()
+    n_params = sum(
+        int(np.prod(p.shape)) for p in jax.tree_util.tree_leaves(params_s)
+    )
+
+    def state_bytes(name):
+        opt = make_optimizer(name, 3e-3)
+        state_s = jax.eval_shape(
+            lambda: opt.init(
+                jax.tree_util.tree_map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), params_s
+                )
+            )
+        )
+        return state_nbytes(state_s)
+
+    b32 = state_bytes("adamw32")
+    bprod = state_bytes("production4bit")
+    return {
+        "meta": {"steps": steps, "sr_seed": SR_SEED, "lr": 3e-3},
+        "quality": {
+            "adamw32_loss": round(r32["loss_final"], 6),
+            "production4bit_loss": round(rprod["loss_final"], 6),
+            "gap": round(rprod["loss_final"] - r32["loss_final"], 6),
+            "production4bit_unstable": bool(rprod["unstable"]),
+        },
+        "memory": {
+            "n_params": n_params,
+            "adamw32_state_bytes": int(b32),
+            "production4bit_state_bytes": int(bprod),
+            "ratio": round(bprod / b32, 6),
+        },
+    }
+
+
+def compare(
+    current: Dict,
+    baseline: Dict,
+    *,
+    loss_gap_tol: float = LOSS_GAP_TOL,
+    memory_ratio_tol: float = MEMORY_RATIO_TOL,
+) -> List[str]:
+    """Return human-readable violations of ``current`` vs ``baseline``."""
+    violations = []
+    if current["meta"]["steps"] != baseline["meta"]["steps"]:
+        violations.append(
+            f"meta.steps mismatch: current {current['meta']['steps']} vs "
+            f"baseline {baseline['meta']['steps']} — regenerate with matching "
+            "--steps or --update the baseline"
+        )
+        return violations
+
+    if current["quality"]["production4bit_unstable"]:
+        violations.append("production4bit run went unstable (nonfinite/blowup)")
+
+    gap_cur = current["quality"]["gap"]
+    gap_base = baseline["quality"]["gap"]
+    if abs(gap_cur - gap_base) > loss_gap_tol:
+        violations.append(
+            "quality gap (production4bit - adamw32 final loss) drifted: "
+            f"{gap_cur:+.4f} vs baseline {gap_base:+.4f} "
+            f"(tol {loss_gap_tol})"
+        )
+
+    for key in ("adamw32_state_bytes", "production4bit_state_bytes", "n_params"):
+        if current["memory"][key] != baseline["memory"][key]:
+            violations.append(
+                f"memory.{key} changed: {current['memory'][key]} vs "
+                f"baseline {baseline['memory'][key]} — state layout drift"
+            )
+    if abs(current["memory"]["ratio"] - baseline["memory"]["ratio"]) > memory_ratio_tol:
+        violations.append(
+            f"memory ratio drifted: {current['memory']['ratio']:.6f} vs "
+            f"baseline {baseline['memory']['ratio']:.6f}"
+        )
+    return violations

@@ -65,7 +65,12 @@ def tab1_second_moment_ablation() -> List[Tuple[str, float, str]]:
 def tab2_optimizer_comparison() -> List[Tuple[str, float, str]]:
     """Tab. 2: full-precision vs memory-efficient optimizers (the production
     partition preset rides along as the quality row for fp32-embeddings +
-    4-bit-SR-body training)."""
+    4-bit-SR-body training).
+
+    The fused rows exercise the Pallas kernel route (Tab. 4's "fused"
+    operator): ``4bit-AdamW-fused`` routes eligible leaves round-to-nearest,
+    ``production4bit-SR`` (kernel on by default) with in-kernel stochastic
+    requantization."""
     opts = [
         ("32bit-AdamW", make_optimizer("adamw32", LR), None),
         ("Adafactor", make_optimizer("adafactor", LR, b1=0.9), None),
@@ -73,6 +78,10 @@ def tab2_optimizer_comparison() -> List[Tuple[str, float, str]]:
         ("SM3", make_optimizer("sm3", LR), None),
         ("8bit-AdamW", make_optimizer("adamw8bit", LR, exclude_embeddings=True), None),
         ("4bit-AdamW", make_optimizer("adamw4bit", LR), None),
+        ("4bit-AdamW-fused", make_optimizer("adamw4bit", LR, use_kernel=True), None),
+        ("4bit-AdamW-fused-SR",
+         make_optimizer("adamw4bit", LR, stochastic_rounding=True, use_kernel=True),
+         0),
         ("4bit-Factor", make_optimizer("factor4bit", LR), None),
         ("production4bit-SR", make_optimizer("production4bit", LR), 0),
     ]

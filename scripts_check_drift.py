@@ -1,0 +1,71 @@
+#!/usr/bin/env python
+"""Benchmark-drift gate: production4bit quality/memory vs the tracked baseline.
+
+Regenerates the fast production benchmark rows (``benchmarks.drift``) and
+compares them against ``benchmarks/results/baseline.json``:
+
+    python scripts_check_drift.py            # check, exit 1 on drift
+    python scripts_check_drift.py --update   # rewrite the baseline in place
+
+Run from the repo root with ``PYTHONPATH=src`` (the CI bench-drift job does
+exactly this).  Intentional changes to the production preset regenerate the
+baseline with ``--update`` and commit the diff — the JSON diff *is* the
+review artifact for quality/memory movement.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from benchmarks import drift  # noqa: E402
+
+DEFAULT_BASELINE = os.path.join("benchmarks", "results", "baseline.json")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--steps", type=int, default=drift.DEFAULT_STEPS)
+    ap.add_argument(
+        "--update", action="store_true", help="rewrite the baseline file"
+    )
+    args = ap.parse_args()
+
+    current = drift.production_metrics(steps=args.steps)
+    print("current production metrics:")
+    print(json.dumps(current, indent=2))
+
+    if args.update:
+        os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+        with open(args.baseline, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"baseline written: {args.baseline}")
+        return 0
+
+    if not os.path.exists(args.baseline):
+        print(
+            f"FAIL: no baseline at {args.baseline}; create one with --update",
+            file=sys.stderr,
+        )
+        return 1
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    violations = drift.compare(current, baseline)
+    if violations:
+        print("\nDRIFT DETECTED vs", args.baseline, file=sys.stderr)
+        for v in violations:
+            print(" -", v, file=sys.stderr)
+        return 1
+    print(f"\nOK: within tolerance of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

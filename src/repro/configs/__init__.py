@@ -90,7 +90,10 @@ def reduced_config(name: str) -> ModelConfig:
         num_heads=heads,
         num_kv_heads=kv,
         head_dim=16,
-        d_ff=128 if cfg.d_ff else 0,
+        # d_ff is a multiple of 256 so the reduced mlp leaves satisfy the
+        # fused-kernel layout contract — CPU smoke runs of production4bit /
+        # use_kernel=true exercise the real kernel route, not a fallback.
+        d_ff=256 if cfg.d_ff else 0,
         vocab_size=512,
         num_experts=min(cfg.num_experts, 4),
         ssm_state=min(cfg.ssm_state, 8),

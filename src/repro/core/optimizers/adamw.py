@@ -95,9 +95,10 @@ def quantized_adamw(
 ) -> Optimizer:
     """AdamW whose moments are stored per ``QuantPolicy`` (None => fp32).
 
-    ``use_kernel`` routes eligible leaves (4-bit m, 2-d tensors) through the
-    fused Pallas update in ``repro.kernels.ops`` instead of the reference
-    dequant->update->requant composition.
+    ``use_kernel`` routes eligible leaves (4-bit B128 m + rank-1 v, ndim>=2
+    tensors with last dim % 256 == 0, round-to-nearest or stochastic
+    rounding) through the fused Pallas update in ``repro.kernels.ops``
+    instead of the reference dequant->update->requant composition.
     """
     tx = adamw_chain(
         lr,

@@ -55,7 +55,7 @@ def production4bit(
     eps: float = 1e-8,
     weight_decay: float = 0.01,
     stochastic_rounding: bool = True,
-    use_kernel: bool = False,
+    use_kernel: bool = True,
     fp32_patterns: Optional[Tuple[str, ...]] = None,
     name: str = "production4bit",
 ) -> Optimizer:
@@ -63,9 +63,10 @@ def production4bit(
     4-bit (B128/DE m, Rank-1/Linear v) body with stochastic rounding.
 
     ``fp32_patterns`` overrides which leaf paths stay uncompressed (regexes
-    over '/'-joined param paths); ``use_kernel`` routes eligible body leaves
-    through the fused Pallas kernel (requires ``stochastic_rounding=False`` —
-    the fused path is round-to-nearest only, and eligibility enforces it).
+    over '/'-joined param paths).  ``use_kernel`` (default on) routes
+    eligible body leaves through the fused Pallas whole-step kernel — since
+    the kernel requantizes stochastically in-tile (per-leaf SR key, see
+    docs/kernels.md), the production SR default keeps the fused fast path.
     """
     m_cfg, v_cfg = M_4BIT, V_4BIT
     if stochastic_rounding:

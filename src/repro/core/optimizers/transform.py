@@ -556,8 +556,12 @@ class FusedAdamWRoute:
     The kernel computes the *whole* AdamW step (dequant -> Eq. 1 -> requant
     -> param write) in one pass, so the route needs the full hyperparameters
     and emits a ``Replace`` update leaf.  Eligibility mirrors the kernel's
-    layout contract: 4-bit B128 m, 4-bit rank-1 v, round-to-nearest, 2-d
-    param with the last dim a multiple of 256 (nibble + B128 tile alignment).
+    layout contract: 4-bit B128 m, 4-bit rank-1 v, ndim>=2 param with the
+    last dim a multiple of 256 (nibble + B128 tile alignment); leading dims
+    run as stacked 2-d slices.  Stochastic-rounding configs are eligible —
+    the kernel requantizes with in-tile counter-based Threefry noise keyed by
+    the per-leaf SR key (both moments must agree on SR so one key derivation
+    covers the leaf).
     """
 
     lr: Schedule
@@ -576,17 +580,21 @@ class FusedAdamWRoute:
             and m_s.config.bits == 4
             and m_s.config.normalization == "blockwise"
             and m_s.config.block_size == 128
-            and not m_s.config.stochastic_rounding
             and isinstance(v_s, QuantizedTensor)
             and v_s.config.bits == 4
             and v_s.config.normalization == "rank1"
-            and not v_s.config.stochastic_rounding
-            and p.ndim == 2
+            and m_s.config.stochastic_rounding == v_s.config.stochastic_rounding
+            and p.ndim >= 2
             and p.shape[-1] % 256 == 0
         )
 
     def run(
-        self, p: jnp.ndarray, g: jnp.ndarray, comp: Mapping[str, Any], step: jnp.ndarray
+        self,
+        p: jnp.ndarray,
+        g: jnp.ndarray,
+        comp: Mapping[str, Any],
+        step: jnp.ndarray,
+        key: Optional[jax.Array] = None,
     ) -> Tuple[jnp.ndarray, Dict[str, Any]]:
         from repro.kernels import ops as kernel_ops
 
@@ -596,6 +604,7 @@ class FusedAdamWRoute:
         w_new, m2, v2 = kernel_ops.fused_adamw4_leaf(
             p, g, comp[self.m_field], comp[self.v_field],
             lr_t, self.b1, self.b2, self.eps, self.weight_decay, bc1, bc2,
+            key=key,
         )
         return w_new, {self.m_field: m2, self.v_field: v2}
 
@@ -679,15 +688,17 @@ def compressed(
         out_state = {name: [] for name in field_names}
         for i in range(n):
             comp_i = {name: comp_leaves[name][i] for name in field_names}
+            leaf_key = jax.random.fold_in(key, i) if key is not None else None
             if kernel is not None and kernel.eligible(comp_i, leaves_p[i]):
-                w_new, new_comp = kernel.run(leaves_p[i], leaves_g[i], comp_i, count)
+                w_new, new_comp = kernel.run(
+                    leaves_p[i], leaves_g[i], comp_i, count, key=leaf_key
+                )
                 out_u.append(Replace(w_new))
                 for name in field_names:
                     out_state[name].append(new_comp[name])
                 continue
 
             # Alg. 1 line 5: recompress, with per-leaf/per-moment SR keys.
-            leaf_key = jax.random.fold_in(key, i) if key is not None else None
             if leaf_key is not None and len(field_names) > 1:
                 field_keys = dict(
                     zip(field_names, jax.random.split(leaf_key, len(field_names)))
@@ -788,14 +799,14 @@ def partition(
     ``transforms``.  Each sub-transform sees the full tree with non-owned
     leaves replaced by ``MaskedNode`` (which flatten to nothing), so leaf
     paths — and hence ``QuantPolicy`` decisions — are unchanged.
+
+    Label resolution (path building + regex matching) is cached by the param
+    tree's (treedef, leaf shapes): labels are pure functions of structure and
+    shape, so steady-state ``update`` calls skip the per-leaf regex walk
+    entirely instead of re-labelling every step.
     """
     transforms = dict(transforms)
-
-    def _labels_tree(params):
-        if callable(labels):
-            paths = tree_paths(params)
-            return jax.tree_util.tree_map(labels, paths, params)
-        return labels
+    _resolved_cache: Dict[Any, Tuple[Any, Tuple[str, ...], Tuple[str, ...]]] = {}
 
     def _mask(tree, lab_tree, label):
         return jax.tree_util.tree_map(
@@ -810,23 +821,46 @@ def partition(
                     f"known labels: {sorted(transforms)}"
                 )
 
-    def _param_paths(params):
-        return tuple(jax.tree_util.tree_leaves(tree_paths(params)))
+    def _resolved(params):
+        """(label tree, label leaves, param paths), cached per tree layout.
+
+        The key covers everything a label fn may legitimately inspect about a
+        leaf (structure, shape, dtype) — value-dependent labels would be
+        untraceable under jit anyway.
+        """
+        treedef = jax.tree_util.tree_structure(params)
+        shapes = tuple(
+            (tuple(getattr(p, "shape", ())), str(getattr(p, "dtype", "")))
+            for p in jax.tree_util.tree_leaves(params)
+        )
+        cache_key = (treedef, shapes)
+        hit = _resolved_cache.get(cache_key)
+        if hit is None:
+            paths_tree = tree_paths(params)
+            if callable(labels):
+                lab_tree = jax.tree_util.tree_map(labels, paths_tree, params)
+            else:
+                lab_tree = labels
+            lab_leaves = tuple(jax.tree_util.tree_leaves(lab_tree))
+            _check(lab_leaves)
+            paths = tuple(jax.tree_util.tree_leaves(paths_tree))
+            hit = (lab_tree, lab_leaves, paths)
+            _resolved_cache[cache_key] = hit
+        return hit
 
     def init(params):
-        lab_tree = _labels_tree(params)
-        _check(jax.tree_util.tree_leaves(lab_tree))
+        lab_tree, _, paths = _resolved(params)
         return PartitionState(
             {
                 lab: tx.init(_mask(params, lab_tree, lab))
                 for lab, tx in transforms.items()
             },
-            _param_paths(params),
+            paths,
         )
 
     def update(updates, state, params=None, *, key=None):
+        lab_tree, lab_leaves, cur = _resolved(params)
         if state.param_paths is not None:
-            cur = _param_paths(params)
             if cur != state.param_paths:
                 added = set(cur) - set(state.param_paths)
                 removed = set(state.param_paths) - set(cur)
@@ -836,9 +870,7 @@ def partition(
                     "re-init the optimizer state (or migrate it) instead of "
                     "training new params with stale partition state"
                 )
-        lab_tree = _labels_tree(params)
-        lab_leaves, treedef = jax.tree_util.tree_flatten(lab_tree)
-        _check(lab_leaves)
+        treedef = jax.tree_util.tree_structure(lab_tree)
 
         # Distinct SR key per partition: leaf indices restart at 0 inside each
         # masked subtree, so handing every partition the same key would give

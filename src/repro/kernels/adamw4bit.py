@@ -20,16 +20,30 @@ TPU adaptation (vs the CUDA original):
 
 Tiles are (TR, TC) with TC a multiple of 256 so that packed code tiles
 (TC/2) and B128 scale tiles (TC/128) stay integral.
+
+Stochastic rounding (``use_sr=True``) requantizes both moments with
+counter-based Threefry-2x32 noise generated *inside* the tile: the counter is
+the element's global index in the (R, C) slice, the key the per-slice SR key
+words, and the stream id separates m from v — so the noise is a pure function
+of (key, element), independent of tiling and mesh layout, and bit-identical
+to the pure-jnp SR oracle in ``ref.py`` (see ``sr.py``).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.sr import (
+    STREAM_M,
+    STREAM_V,
+    threefry2x32,
+    uniform_from_bits,
+)
 
 __all__ = ["fused_adamw4", "TILE_R", "TILE_C"]
 
@@ -53,6 +67,52 @@ def _encode16(n, table_ref, num_points: int):
         mid = (table_ref[0, k] + table_ref[0, k + 1]) * 0.5
         idx = idx + (n > mid).astype(jnp.int32)
     return idx.astype(jnp.uint8)
+
+
+def _encode16_sr(n, table_ref, num_points: int, u):
+    """Stochastic codes: round to the bracketing table points with probability
+    proportional to proximity, deciding with the uniform draw ``u``.
+
+    Same bracketing/probability math as ``mappings.encode_stochastic`` /
+    ``ref.encode_table_stochastic_bits`` (branchless select-tree form), so the
+    kernel's SR codes match the jnp oracle bit-for-bit given the same ``u``.
+    """
+    ge = jnp.zeros(n.shape, jnp.int32)
+    for k in range(num_points):
+        ge = ge + (n >= table_ref[0, k]).astype(jnp.int32)
+    lo = jnp.clip(ge - 1, 0, num_points - 2)
+    t_lo = jnp.zeros(n.shape, jnp.float32)
+    t_hi = jnp.zeros(n.shape, jnp.float32)
+    for k in range(num_points - 1):
+        t_lo = jnp.where(lo == k, table_ref[0, k], t_lo)
+        t_hi = jnp.where(lo == k, table_ref[0, k + 1], t_hi)
+    span = jnp.maximum(t_hi - t_lo, 1e-12)
+    p_hi = jnp.clip((n - t_lo) / span, 0.0, 1.0)
+    idx = lo + (u < p_hi).astype(jnp.int32)
+    return idx.astype(jnp.uint8)
+
+
+def _tile_uniforms(seed_ref, tile_shape, full_cols: int, stream: int):
+    """Per-element uniforms for this tile, counter = global r * C + c.
+
+    Keyed on (per-slice seed words, element index, moment stream) — the
+    in-kernel twin of ``sr.element_uniforms``, evaluated tile-locally so no
+    random tensor ever touches HBM.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    tr, tc = tile_shape
+    rows = jax.lax.broadcasted_iota(jnp.uint32, (tr, tc), 0) + (i * tr).astype(
+        jnp.uint32
+    )
+    cols = jax.lax.broadcasted_iota(jnp.uint32, (tr, tc), 1) + (j * tc).astype(
+        jnp.uint32
+    )
+    linear = rows * jnp.uint32(full_cols) + cols
+    bits, _ = threefry2x32(
+        seed_ref[0, 0], seed_ref[0, 1], linear, jnp.uint32(stream)
+    )
+    return uniform_from_bits(bits)
 
 
 def _unpack(packed):
@@ -93,10 +153,10 @@ def _kernel(
     # inputs
     w_ref, g_ref, m_packed_ref, m_scale_ref, v_packed_ref,
     vr_ref, vc_ref, vr_new_ref, vc_new_ref,
-    scalars_ref, m_table_ref, v_table_ref,
+    scalars_ref, m_table_ref, v_table_ref, seed_ref,
     # outputs
     w_out_ref, m_packed_out_ref, m_scale_out_ref, v_packed_out_ref,
-    *, m_points: int, v_points: int,
+    *, m_points: int, v_points: int, full_cols: int, use_sr: bool,
 ):
     lr = scalars_ref[0, 0]
     b1 = scalars_ref[0, 1]
@@ -132,16 +192,28 @@ def _kernel(
     m_scale_new = _guard(jnp.max(jnp.abs(m_blocks), axis=-1))  # (TR, TC/128)
     m_scale_out_ref[...] = m_scale_new
     m_n = (m_blocks / m_scale_new[..., None]).reshape(tr, tc)
-    m_packed_out_ref[...] = _pack(_encode16(m_n, m_table_ref, m_points))
+    if use_sr:
+        u_m = _tile_uniforms(seed_ref, (tr, tc), full_cols, STREAM_M)
+        m_codes = _encode16_sr(m_n, m_table_ref, m_points, u_m)
+    else:
+        m_codes = _encode16(m_n, m_table_ref, m_points)
+    m_packed_out_ref[...] = _pack(m_codes)
 
     v_scale_new = _guard(jnp.minimum(vr_new_ref[...], vc_new_ref[...]))
     v_n = v_new / v_scale_new
-    v_packed_out_ref[...] = _pack(_encode16(v_n, v_table_ref, v_points))
+    if use_sr:
+        u_v = _tile_uniforms(seed_ref, (tr, tc), full_cols, STREAM_V)
+        v_codes = _encode16_sr(v_n, v_table_ref, v_points, u_v)
+    else:
+        v_codes = _encode16(v_n, v_table_ref, v_points)
+    v_packed_out_ref[...] = _pack(v_codes)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("b1", "b2", "eps", "weight_decay", "interpret", "tile_r", "tile_c"),
+    static_argnames=(
+        "b1", "b2", "eps", "weight_decay", "interpret", "tile_r", "tile_c", "use_sr",
+    ),
 )
 def fused_adamw4(
     w: jnp.ndarray,          # (R, C)
@@ -158,6 +230,7 @@ def fused_adamw4(
     lr: jnp.ndarray,
     bc1: jnp.ndarray,        # 1 - b1^t
     bc2: jnp.ndarray,        # 1 - b2^t
+    sr_seed: Optional[jnp.ndarray] = None,  # (2,) uint32 per-slice key words
     *,
     b1: float,
     b2: float,
@@ -166,8 +239,13 @@ def fused_adamw4(
     interpret: bool = False,
     tile_r: int = TILE_R,
     tile_c: int = TILE_C,
+    use_sr: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Run the fused update. Shapes must be tile-aligned (wrapper pads).
+
+    ``use_sr=True`` requantizes stochastically with in-tile Threefry noise
+    keyed by ``sr_seed`` (required in that case); ``use_sr=False`` is the
+    bit-exact round-to-nearest path.
 
     Returns (w_new, m_packed_new, m_scale_new, v_packed_new).
     """
@@ -184,6 +262,14 @@ def fused_adamw4(
 
     m_points = int(m_table.shape[0])
     v_points = int(v_table.shape[0])
+
+    if use_sr and sr_seed is None:
+        raise ValueError("fused_adamw4(use_sr=True) requires sr_seed")
+    seed = (
+        jnp.zeros((1, 2), jnp.uint32)
+        if sr_seed is None
+        else jnp.asarray(sr_seed, jnp.uint32).reshape(1, 2)
+    )
 
     scalars = jnp.stack(
         [
@@ -210,7 +296,9 @@ def fused_adamw4(
         jax.ShapeDtypeStruct((R, C // 2), jnp.uint8),
     )
 
-    kernel = functools.partial(_kernel, m_points=m_points, v_points=v_points)
+    kernel = functools.partial(
+        _kernel, m_points=m_points, v_points=v_points, full_cols=C, use_sr=use_sr
+    )
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -227,6 +315,7 @@ def fused_adamw4(
             full((1, 8)),             # scalars
             full((1, 16)),            # m_table
             full((1, 16)),            # v_table
+            full((1, 2)),             # SR seed words (per-slice key)
         ],
         out_specs=[
             tile(tc),                 # w_new
@@ -249,4 +338,5 @@ def fused_adamw4(
         scalars,
         pad16(m_table),
         pad16(v_table),
+        seed,
     )

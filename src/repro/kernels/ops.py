@@ -1,20 +1,36 @@
 """jit'd wrappers around the Pallas kernels with backend dispatch.
 
 `fused_adamw4_leaf` is the integration point used by
-``repro.core.optimizers.adamw.quantized_adamw(use_kernel=True)``: it takes a
+``FusedAdamWRoute`` (``repro.core.optimizers.transform``): it takes a
 (param, grad, QuantizedTensor m, QuantizedTensor v) leaf and returns the
 updated triple, computing the new rank-1 scales in a prepass and running the
 elementwise dequant->AdamW->requant in one Pallas kernel.
 
+Leaves may have stacked leading dims (the model stores per-layer-group
+tensors ``(L, d_in, d_out)``): the leaf is viewed as L independent 2-d
+slices, each handed to one kernel launch.  The rank-1 v scales stay *global*
+per-dim stats (matching ``rank1_normalize``); per slice, the leading-dim
+stats fold into the row stat — ``min(lead_l, r_i, c_j) ==
+min(min(lead_l, r_i), c_j)`` — so each slice is exactly the kernel's
+``min(row, col)`` contract.
+
+Stochastic rounding: the per-leaf SR key (handed down from ``compressed()``'s
+``fold_in(step key, leaf index)`` stream) derives one key per slice via
+``fold_in(leaf_key, slice index)``; the kernel (and the reference oracle)
+expand it to per-element Threefry noise counter-keyed on the element index,
+so the noise is independent of tiling and mesh layout and identical across
+backends.
+
 Backend selection: on TPU the kernel runs compiled; elsewhere it runs in
 ``interpret=True`` mode (Python emulation — correct but slow), unless
-``REPRO_FORCE_INTERPRET=0`` routes to the pure-jnp reference instead.
+``REPRO_KERNEL_BACKEND=ref`` routes to the pure-jnp reference instead
+(the default off-TPU — fast on CPU, bit-identical to the kernel).
 """
 
 from __future__ import annotations
 
 import os
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,8 +38,11 @@ import jax.numpy as jnp
 from repro.core.quantizer import QuantizedTensor
 from repro.kernels import ref
 from repro.kernels.adamw4bit import fused_adamw4
+from repro.kernels.sr import key_words
 
 __all__ = ["fused_adamw4_leaf", "kernel_backend"]
+
+_BLOCK = 128
 
 
 def kernel_backend() -> str:
@@ -38,11 +57,36 @@ def kernel_backend() -> str:
     return "ref"
 
 
-def _structured_scales(m_s: QuantizedTensor) -> jnp.ndarray:
-    """Flat (nb,) B128 scales -> structured (R, C/128)."""
-    R, C = m_s.shape
-    return m_s.scales[0].reshape(R, C // 128)
+def _rank1_slice_stats(
+    stats: Tuple[jnp.ndarray, ...], shape: Tuple[int, ...]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-dim rank-1 stats -> per-slice (L, R) row stats + shared (C,) cols.
 
+    Leading-dim stats fold into the row stat (min is associative), so each
+    2-d slice sees the same per-element scale ``rank1_denorm`` would build.
+    """
+    lead_shape = shape[:-2]
+    row, col = stats[-2], stats[-1]
+    if not lead_shape:
+        return row[None, :], col
+    lead = None
+    for r, st in enumerate(stats[:-2]):
+        view = [1] * len(lead_shape)
+        view[r] = lead_shape[r]
+        b = st.reshape(view)
+        lead = b if lead is None else jnp.minimum(lead, b)
+    lead = jnp.broadcast_to(lead, lead_shape).reshape(-1)  # (L,)
+    return jnp.minimum(lead[:, None], row[None, :]), col
+
+
+def _rank1_new_stats(v_new: jnp.ndarray) -> Tuple[jnp.ndarray, ...]:
+    """Per-dim absmax stats of the updated v (rank1_normalize's layout).
+    v_new is nonnegative, so plain maxes are absmaxes."""
+    nd = v_new.ndim
+    return tuple(
+        jnp.max(v_new, axis=tuple(i for i in range(nd) if i != r))
+        for r in range(nd)
+    )
 
 
 def fused_adamw4_leaf(
@@ -57,38 +101,82 @@ def fused_adamw4_leaf(
     weight_decay: float,
     bc1: jnp.ndarray,
     bc2: jnp.ndarray,
+    key: Optional[jax.Array] = None,
 ) -> Tuple[jnp.ndarray, QuantizedTensor, QuantizedTensor]:
-    """One fused-kernel AdamW step for a 2-d leaf with 4-bit m (B128) and
-    4-bit v (rank-1). Falls back to the reference composition for layouts
-    the kernel does not cover (caller guards eligibility)."""
-    R, C = p.shape
+    """One fused-kernel AdamW step for an ndim>=2 leaf with 4-bit m (B128)
+    and 4-bit v (rank-1).  ``key`` activates in-kernel stochastic rounding
+    when the configs request it (caller guards eligibility; no key => RTN,
+    mirroring ``quantize()``'s fallback)."""
+    shape = p.shape
+    R, C = shape[-2], shape[-1]
+    L = p.size // (R * C)
+    use_sr = bool(m_s.config.stochastic_rounding) and key is not None
+
     m_table = m_s.config.table()
     v_table = v_s.config.table()
-    g32 = g.astype(jnp.float32)
 
-    # Prepass: rank-1 stats of the UPDATED v (XLA fuses dequant+max).
-    v_old = ref.dequant_rank1(v_s.codes, v_s.scales[0], v_s.scales[1], v_table)
-    v_new_expr = b2 * v_old + (1.0 - b2) * g32 * g32
-    v_r_new = jnp.max(v_new_expr, axis=1)
-    v_c_new = jnp.max(v_new_expr, axis=0)
+    p3 = p.reshape(L, R, C)
+    g3 = g.astype(jnp.float32).reshape(L, R, C)
+    m_packed = m_s.codes.reshape(L, R, C // 2)
+    m_scale = m_s.scales[0].reshape(L, R, C // _BLOCK)
+    v_packed = v_s.codes.reshape(L, R, C // 2)
+    v_r, v_c = _rank1_slice_stats(v_s.scales, shape)  # (L, R), (C,)
+
+    # Prepass: global rank-1 stats of the UPDATED v (XLA fuses dequant+max;
+    # nothing fp32 is materialized in HBM on the compiled path).
+    v_old = jnp.stack(
+        [ref.dequant_rank1(v_packed[l], v_r[l], v_c, v_table) for l in range(L)]
+    )
+    v_new_expr = b2 * v_old + (1.0 - b2) * g3 * g3
+    new_stats = _rank1_new_stats(v_new_expr.reshape(shape))
+    v_r_new, v_c_new = _rank1_slice_stats(new_stats, shape)
+
+    slice_keys = (
+        [key_words(jax.random.fold_in(key, l)) for l in range(L)]
+        if use_sr
+        else [None] * L
+    )
 
     backend = kernel_backend()
-    if backend == "ref":
-        w_new, m_packed, m_scale, v_packed, v_r, v_c = ref.fused_adamw4_reference(
-            p, g, m_s.codes, _structured_scales(m_s), v_s.codes,
-            v_s.scales[0], v_s.scales[1], m_table, v_table,
-            lr, b1, b2, eps, weight_decay, bc1, bc2,
-        )
-    else:
-        w_new, m_packed, m_scale, v_packed = fused_adamw4(
-            p, g, m_s.codes, _structured_scales(m_s), v_s.codes,
-            v_s.scales[0], v_s.scales[1], v_r_new, v_c_new,
-            m_table, v_table, lr, bc1, bc2,
-            b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
-            interpret=(backend != "tpu"),
-        )
-        v_r, v_c = v_r_new, v_c_new
+    w_out, mp_out, ms_out, vp_out = [], [], [], []
+    for l in range(L):
+        if backend == "ref":
+            if use_sr:
+                k0, k1 = slice_keys[l]
+                w_new, mp, ms, vp, _, _ = ref.fused_adamw4_sr_reference(
+                    p3[l], g3[l], m_packed[l], m_scale[l], v_packed[l],
+                    v_r[l], v_c, m_table, v_table,
+                    lr, b1, b2, eps, weight_decay, bc1, bc2,
+                    jnp.stack([k0, k1]), v_r_new[l], v_c_new,
+                )
+            else:
+                w_new, mp, ms, vp, _, _ = ref.fused_adamw4_reference(
+                    p3[l], g3[l], m_packed[l], m_scale[l], v_packed[l],
+                    v_r[l], v_c, m_table, v_table,
+                    lr, b1, b2, eps, weight_decay, bc1, bc2,
+                    v_r_new[l], v_c_new,
+                )
+        else:
+            seed = (
+                jnp.stack(slice_keys[l]) if use_sr else None
+            )
+            w_new, mp, ms, vp = fused_adamw4(
+                p3[l], g3[l], m_packed[l], m_scale[l], v_packed[l],
+                v_r[l], v_c, v_r_new[l], v_c_new,
+                m_table, v_table, lr, bc1, bc2, seed,
+                b1=b1, b2=b2, eps=eps, weight_decay=weight_decay,
+                interpret=(backend != "tpu"), use_sr=use_sr,
+            )
+        w_out.append(w_new)
+        mp_out.append(mp)
+        ms_out.append(ms)
+        vp_out.append(vp)
 
-    m2 = QuantizedTensor(m_packed, (m_scale.reshape(-1),), m_s.shape, m_s.config)
-    v2 = QuantizedTensor(v_packed, (v_r, v_c), v_s.shape, v_s.config)
+    w_new = jnp.stack(w_out).reshape(shape).astype(p.dtype)
+    m_codes = jnp.stack(mp_out).reshape(m_s.codes.shape)
+    m_scales = jnp.stack(ms_out).reshape(m_s.scales[0].shape)
+    v_codes = jnp.stack(vp_out).reshape(v_s.codes.shape)
+
+    m2 = QuantizedTensor(m_codes, (m_scales,), m_s.shape, m_s.config)
+    v2 = QuantizedTensor(v_codes, new_stats, v_s.shape, v_s.config)
     return w_new, m2, v2

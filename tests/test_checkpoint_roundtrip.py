@@ -106,6 +106,76 @@ def test_roundtrip_bit_identical_all_optimizers(name, overrides, tmp_path):
     )
 
 
+# d_ff=256 -> the mlp w1/w3 leaves (1, 64, 256) are fused-kernel eligible, so
+# these runs exercise the in-kernel SR requantization path end to end.
+KERNEL_CFG = ModelConfig(
+    name="micro-kernel-lm",
+    num_layers=1,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=256,
+    blocks=(LayerSpec("dense", 0),),
+    remat=False,
+)
+
+
+@pytest.mark.parametrize("backend", ["ref", "interpret"])
+@pytest.mark.parametrize(
+    "name,overrides",
+    [
+        ("production4bit", {}),
+        ("adamw4bit", {"stochastic_rounding": True, "use_kernel": True}),
+    ],
+    ids=["production4bit", "adamw4bit_sr_kernel"],
+)
+def test_roundtrip_bit_identical_fused_sr_path(
+    name, overrides, backend, tmp_path, monkeypatch
+):
+    """save -> restore -> continue through the *fused SR* route is bit-exact:
+    the per-step SR key stream is a pure function of (base key, step), the
+    in-kernel Threefry noise a pure function of (leaf key, element), so the
+    restored run re-derives identical codes — on both the pure-jnp reference
+    backend and the Pallas kernel in interpret mode."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", backend)
+    opt = make_optimizer(name, 3e-3, **overrides)
+    params, _ = init_model(jax.random.PRNGKey(0), KERNEL_CFG)
+    key = jax.random.PRNGKey(17)
+    state = make_train_state(params, opt, key=key)
+    step_fn = jax.jit(build_train_step(KERNEL_CFG, opt))
+
+    for t in range(3):
+        state, _ = step_fn(state, _batch(t))
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 3, state)
+
+    uninterrupted = state
+    for t in range(3, 6):
+        uninterrupted, _ = step_fn(uninterrupted, _batch(t))
+
+    target = jax.eval_shape(lambda: make_train_state(params, opt, key=key))
+    restored, _ = restore_checkpoint(d, target)
+    _assert_states_bitwise(restored, state, f"{name}/{backend}: restored @3")
+    for t in range(3, 6):
+        restored, _ = step_fn(restored, _batch(t))
+    _assert_states_bitwise(
+        restored, uninterrupted, f"{name}/{backend}: fused-SR resume vs uninterrupted"
+    )
+    # sanity: the fused route actually owns leaves in this config — the mlp
+    # moments are quantized with SR and kernel-eligible
+    from repro.core.optimizers.transform import FusedAdamWRoute
+
+    opt_state = restored.opt_state
+    chain_state = opt_state.states["4bit"] if name == "production4bit" else opt_state
+    m_leaf = chain_state["m"]["decoder"][0]["sub0"]["mlp"]["w1"]
+    v_leaf = chain_state["v"]["decoder"][0]["sub0"]["mlp"]["w1"]
+    assert isinstance(m_leaf, QuantizedTensor) and m_leaf.config.stochastic_rounding
+    p_leaf = restored.params["decoder"][0]["sub0"]["mlp"]["w1"]
+    assert FusedAdamWRoute(lr=3e-3).eligible({"m": m_leaf, "v": v_leaf}, p_leaf)
+
+
 def _mesh_step(opt, mesh, axes, state):
     train_step = build_train_step(MICRO_CFG, opt, mesh, axes, zero=True)
     return jit_train_step(train_step, state, _batch(0), axes, mesh, donate=False)

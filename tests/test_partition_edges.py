@@ -159,6 +159,43 @@ def test_production4bit_jits_on_mesh():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6, atol=1e-7)
 
 
+def test_partition_labels_cached_per_treedef():
+    """Label resolution (path building + regex/label-fn calls) must run once
+    per param tree layout, not once per update step (ROADMAP perf item)."""
+    calls = []
+
+    def lab(path, leaf):
+        calls.append(path)
+        return "fp32" if "embed" in path or "bias" in path else "4bit"
+
+    tx = partition(
+        {
+            "fp32": adamw_chain(1e-3),
+            "4bit": adamw_chain(
+                1e-3,
+                m_policy=QuantPolicy(config=M_4BIT),
+                v_policy=QuantPolicy(config=V_4BIT),
+            ),
+        },
+        lab,
+    )
+    params = _params()
+    n_leaves = len(jax.tree_util.tree_leaves(params))
+    state = tx.init(params)
+    assert len(calls) == n_leaves  # one labelling pass at init
+    g = _grads(params)
+    _, state = tx.update(g, state, params)
+    _, state = tx.update(_grads(params, 1), state, params)
+    assert len(calls) == n_leaves, "labels recomputed on steady-state update"
+
+    # a *different* layout is a cache miss (one fresh labelling pass) and
+    # still trips the param-drift guard against the stale state
+    grown = dict(params, extra=jnp.zeros((8, 512), jnp.float32))
+    with pytest.raises(KeyError, match="extra"):
+        tx.update(_grads(grown), state, grown)
+    assert len(calls) == 2 * n_leaves + 1
+
+
 def test_make_optimizer_production4bit_overrides():
     opt = make_optimizer("production4bit", 1e-3, weight_decay=0.1,
                          stochastic_rounding=False)

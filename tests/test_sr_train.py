@@ -121,6 +121,93 @@ def test_sr_keys_decorrelate_and_reproduce(sr_runs):
         np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
+# ---------------------------------------------------------------------------
+# fused-kernel SR route at the train-step level
+# ---------------------------------------------------------------------------
+
+# d_ff=256 makes the mlp w1/w3 leaves (1, 64, 256) kernel-eligible (last dim a
+# multiple of 256, > 4096 elements); attention/embed leaves stay unfused, so a
+# step exercises both routes side by side.
+KCFG = ModelConfig(
+    name="sr-kernel-lm",
+    num_layers=1,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=256,
+    vocab_size=256,
+    blocks=(LayerSpec("dense", 0),),
+    remat=False,
+)
+
+
+def _mlp_leaf(state):
+    return np.asarray(state.params["decoder"][0]["sub0"]["mlp"]["w1"])
+
+
+def _run_two_steps_cfg(opt, params, key, cache_key, cfg):
+    if cache_key not in _STEP_CACHE:
+        _STEP_CACHE[cache_key] = jax.jit(build_train_step(cfg, opt))
+    step_fn = _STEP_CACHE[cache_key]
+    state = make_train_state(params, opt, key=key)
+    for t in range(2):
+        state, _ = step_fn(state, _batch(t))
+    return state
+
+
+def test_kernel_route_sr_statistically_matches_unfused(monkeypatch):
+    """Training through the fused SR kernel route must agree with the unfused
+    compressed() SR path in distribution: the two mean trajectories (over N
+    base keys) coincide much more tightly than single runs scatter, on a
+    kernel-eligible leaf."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    params, _ = init_model(jax.random.PRNGKey(0), KCFG)
+    n_keys = 16
+
+    def sweep(use_kernel):
+        opt = make_optimizer(
+            "adamw4bit", 3e-3, stochastic_rounding=True, use_kernel=use_kernel
+        )
+        tag = f"adamw4bit_sr_k{int(use_kernel)}"
+        return [
+            _mlp_leaf(
+                _run_two_steps_cfg(opt, params, jax.random.PRNGKey(i), tag, KCFG)
+            )
+            for i in range(n_keys)
+        ]
+
+    fused = sweep(True)
+    unfused = sweep(False)
+    scatter = float(np.mean([np.abs(e - fused[0]).mean() for e in fused[1:]]))
+    assert scatter > 0, "kernel-route SR produced no noise — key not plumbed?"
+    gap = float(np.abs(np.mean(fused, axis=0) - np.mean(unfused, axis=0)).mean())
+    assert gap < 0.5 * scatter, (gap, scatter)
+
+
+def test_kernel_route_sr_decorrelates_and_replays(monkeypatch):
+    """Fused-route SR noise: different base keys produce different packed
+    codes; the same base key replays the whole TrainState bit-exactly."""
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "ref")
+    params, _ = init_model(jax.random.PRNGKey(0), KCFG)
+    opt = make_optimizer("production4bit", 3e-3)
+    tag = "production4bit_kernel"
+
+    s_a = _run_two_steps_cfg(opt, params, jax.random.PRNGKey(0), tag, KCFG)
+    s_b = _run_two_steps_cfg(opt, params, jax.random.PRNGKey(1), tag, KCFG)
+    s_a2 = _run_two_steps_cfg(opt, params, jax.random.PRNGKey(0), tag, KCFG)
+
+    m_4bit = s_a.opt_state.states["4bit"]["m"]
+    m_leaf = m_4bit["decoder"][0]["sub0"]["mlp"]["w1"]
+    assert isinstance(m_leaf, QuantizedTensor)
+    m_leaf_b = s_b.opt_state.states["4bit"]["m"]["decoder"][0]["sub0"]["mlp"]["w1"]
+    assert not np.array_equal(np.asarray(m_leaf.codes), np.asarray(m_leaf_b.codes))
+    for x, y in zip(
+        jax.tree_util.tree_leaves(s_a), jax.tree_util.tree_leaves(s_a2)
+    ):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
 def test_sr_noop_without_key():
     """No key in TrainState => deterministic RTN fallback (two SR-configured
     runs without keys are bit-identical)."""
