@@ -16,7 +16,7 @@ import jax.numpy as jnp
 from repro.core.optimizers import linear_warmup_linear_decay, make_optimizer, state_nbytes
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.models import LayerSpec, ModelConfig, init_model
-from repro.train.checkpoint import CheckpointManager, latest_step
+from repro.train.checkpoint import CheckpointManager
 from repro.train.train_loop import build_train_step, make_train_state
 
 
@@ -45,9 +45,9 @@ def main():
 
     step_fn = jax.jit(build_train_step(cfg, opt), donate_argnums=(0,))
     data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch, seed=0))
-    mgr = CheckpointManager(args.ckpt_dir, keep=2)
+    mgr = CheckpointManager(args.ckpt_dir, keep_last=2)
 
-    start = latest_step(args.ckpt_dir) or 0
+    start = mgr.latest_step() or 0
     if start:
         print(f"restoring from checkpoint step {start}")
         state, _ = mgr.restore(jax.eval_shape(lambda: state))

@@ -1,0 +1,28 @@
+"""Checkpoint I/O subsystem: sharded per-host format, async writes,
+cross-mesh resharded restore.
+
+Public API:
+  * ``save_checkpoint`` / ``restore_checkpoint`` — synchronous save (v2
+    sharded by default; ``fmt_version="npz"`` writes the legacy v1 format)
+    and format-dispatching restore.
+  * ``AsyncCheckpointWriter`` — double-buffered background writer.
+  * ``CheckpointManager`` — async saves + keep_last/keep_every retention.
+  * ``latest_step`` — newest *complete* step (COMMIT-validated, with
+    fallback scan past crash leftovers).
+"""
+
+from repro.io.format import latest_step, list_steps, tree_structure_repr
+from repro.io.manager import CheckpointManager
+from repro.io.reader import restore_checkpoint
+from repro.io.writer import AsyncCheckpointWriter, save_checkpoint, snapshot_tree
+
+__all__ = [
+    "save_checkpoint",
+    "restore_checkpoint",
+    "latest_step",
+    "list_steps",
+    "CheckpointManager",
+    "AsyncCheckpointWriter",
+    "snapshot_tree",
+    "tree_structure_repr",
+]

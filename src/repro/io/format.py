@@ -1,0 +1,285 @@
+"""Checkpoint format v2: per-host shard files + global manifest + COMMIT.
+
+On-disk layout of one step (format_version 2):
+
+    <dir>/step_00000100/
+        host_00000.bin          # this host's shard bytes, concatenated
+        host_00001.bin          # (one per host; single-host runs have one)
+        index_host_00000.json   # per-shard {leaf key, offset, nbytes,
+                                #   index ranges, sha256} for host 0's file
+        index_host_00001.json
+        manifest.json           # global metadata: step, extra, structure,
+                                #   per-leaf {key, shape, dtype}, num_hosts
+        COMMIT                  # written LAST, after every host finished —
+                                #   a step dir without COMMIT is incomplete
+    <dir>/LATEST                # advisory fast-path pointer (see latest_step)
+
+Atomicity is the COMMIT barrier, not tmp-dir rename: multiple hosts write
+into the same step dir concurrently, so no single rename can cover the save.
+``manifest.json["format_version"]`` switches the reader; the legacy
+single-file npz format (``arrays.npz`` + v1 manifest, no COMMIT) stays
+readable — a v1 dir counts as complete when its ``arrays.npz`` exists.
+
+Shard placement lives in the per-host index files (a host never knows the
+byte offsets inside another host's file); the reader merges them.  Shard
+``index`` entries are ``[[start, stop], ...]`` half-open ranges per dim of
+the *global* array — the same coordinates ``jax.Array.addressable_shards``
+exposes, so restore can intersect any on-disk layout with any target layout.
+"""
+
+from __future__ import annotations
+
+import glob
+import hashlib
+import json
+import os
+import re
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+__all__ = [
+    "FORMAT_VERSION",
+    "MANIFEST",
+    "COMMIT",
+    "LATEST",
+    "shard_file",
+    "index_file",
+    "step_dir",
+    "parse_step",
+    "list_steps",
+    "latest_step",
+    "is_complete",
+    "repair_interrupted_resaves",
+    "read_manifest",
+    "read_shard_index",
+    "merged_shard_index",
+    "write_latest",
+    "sha_bytes",
+    "dtype_from_str",
+    "tree_structure_repr",
+    "normalize_index",
+]
+
+FORMAT_VERSION = 2
+MANIFEST = "manifest.json"
+COMMIT = "COMMIT"
+LATEST = "LATEST"
+_STEP_RE = re.compile(r"^step_(\d{8})$")
+
+# Serializes the writer's final stage->step_X swap against
+# repair_interrupted_resaves (which may run from any thread via
+# latest_step): without it, repair could rename a .replaced backup into
+# place in the instant the writer is between its two renames, making the
+# writer's own rename fail on a non-empty target.  In-process only;
+# cross-process coordination stays with the COMMIT protocol.
+swap_lock = threading.Lock()
+
+
+def shard_file(process: int) -> str:
+    return f"host_{process:05d}.bin"
+
+
+def index_file(process: int) -> str:
+    return f"index_host_{process:05d}.json"
+
+
+def step_dir(directory: str, step: int) -> str:
+    return os.path.join(directory, f"step_{step:08d}")
+
+
+def parse_step(name: str) -> Optional[int]:
+    m = _STEP_RE.match(name)
+    return int(m.group(1)) if m else None
+
+
+def sha_bytes(buf) -> str:
+    return hashlib.sha256(buf).hexdigest()[:16]
+
+
+def dtype_from_str(s: str) -> np.dtype:
+    """np.dtype from a manifest dtype string, including the ml_dtypes
+    extension types jax uses (bfloat16, float8_*)."""
+    try:
+        return np.dtype(s)
+    except TypeError:
+        import ml_dtypes
+
+        return np.dtype(getattr(ml_dtypes, s))
+
+
+def tree_structure_repr(tree) -> str:
+    """Canonical structure string for manifest validation.
+
+    The treedef repr covers node types, arity, dict keys, and static aux data
+    — for optimizer states that includes the transform-chain nesting and each
+    ``QuantizedTensor``'s ``QuantConfig``."""
+    return str(jax.tree_util.tree_structure(tree))
+
+
+def normalize_index(index, shape) -> List[Tuple[int, int]]:
+    """jax shard index (tuple of slices, possibly open) -> concrete
+    half-open [start, stop) ranges per dim of the global shape."""
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = int(dim) if sl.stop is None else int(sl.stop)
+        out.append((start, stop))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# manifest / index readers
+# ---------------------------------------------------------------------------
+
+
+def read_manifest(d: str) -> Dict[str, Any]:
+    with open(os.path.join(d, MANIFEST)) as f:
+        return json.load(f)
+
+
+def read_shard_index(d: str, process: int) -> Dict[str, Any]:
+    with open(os.path.join(d, index_file(process))) as f:
+        return json.load(f)
+
+
+def merged_shard_index(d: str) -> Dict[str, List[Dict[str, Any]]]:
+    """leaf key -> shard records from every host's index file.
+
+    Each record carries ``file`` (the host's bin file), ``offset``,
+    ``nbytes``, ``index`` ranges, and ``sha256``."""
+    merged: Dict[str, List[Dict[str, Any]]] = {}
+    for p in sorted(glob.glob(os.path.join(glob.escape(d), "index_host_*.json"))):
+        with open(p) as f:
+            idx = json.load(f)
+        fname = shard_file(idx["process"])
+        for key, shards in idx["shards"].items():
+            for s in shards:
+                rec = dict(s)
+                rec["file"] = fname
+                merged.setdefault(key, []).append(rec)
+    return merged
+
+
+# ---------------------------------------------------------------------------
+# completeness / step discovery
+# ---------------------------------------------------------------------------
+
+
+def is_complete(d: str) -> bool:
+    """A step dir is restorable: v2 needs the COMMIT marker plus one index
+    file per host; a legacy v1 dir needs its arrays.npz."""
+    mpath = os.path.join(d, MANIFEST)
+    if not os.path.exists(mpath):
+        return False
+    try:
+        manifest = read_manifest(d)
+    except (OSError, ValueError):
+        return False
+    if manifest.get("format_version", 1) < 2:
+        return os.path.exists(os.path.join(d, "arrays.npz"))
+    if not os.path.exists(os.path.join(d, COMMIT)):
+        return False
+    n_idx = len(glob.glob(os.path.join(glob.escape(d), "index_host_*.json")))
+    return n_idx == int(manifest.get("num_hosts", 1))
+
+
+def list_steps(directory: str, complete_only: bool = True) -> List[int]:
+    if not os.path.isdir(directory):
+        return []
+    steps = []
+    for name in os.listdir(directory):
+        s = parse_step(name)
+        if s is None:
+            continue
+        if complete_only and not is_complete(os.path.join(directory, name)):
+            continue
+        steps.append(s)
+    return sorted(steps)
+
+
+def repair_interrupted_resaves(directory: str) -> None:
+    """Put durable copies back after a crashed re-save.
+
+    Re-saving an already-committed step renames it to ``step_X.replaced``
+    until the replacement commits; a kill in between leaves a complete
+    backup next to an incomplete ``step_X``.  Restore the backup so the
+    step stays reachable (and drop stale backups whose replacement did
+    land).  Process 0 repairs; other hosts wait until nothing repairable
+    remains, so every host's subsequent step scan sees the same set of
+    complete dirs (no host can resume from a pre-repair view)."""
+    if not os.path.isdir(directory):
+        return
+
+    def _repairable():
+        out = []
+        for name in os.listdir(directory):
+            if not name.endswith(".replaced"):
+                continue
+            base = name[: -len(".replaced")]
+            if parse_step(base) is None:
+                continue
+            out.append((os.path.join(directory, name), os.path.join(directory, base)))
+        return out
+
+    if jax.process_index() != 0:
+        deadline = time.monotonic() + 600.0
+        while any(is_complete(b) for b, _ in _repairable()):
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    "waiting for process 0 to repair interrupted re-saves in "
+                    f"{directory}"
+                )
+            time.sleep(0.05)
+        return
+    with swap_lock:
+        for name in os.listdir(directory):
+            if not name.endswith(".replaced"):
+                continue
+            base = name[: -len(".replaced")]
+            if parse_step(base) is None:
+                continue
+            bdir = os.path.join(directory, name)
+            ddir = os.path.join(directory, base)
+            if not is_complete(bdir):
+                continue  # backup itself unusable; leave for inspection
+            if is_complete(ddir):
+                shutil.rmtree(bdir, ignore_errors=True)  # replacement landed
+            else:
+                if os.path.exists(ddir):
+                    shutil.rmtree(ddir)
+                os.rename(bdir, ddir)
+
+
+def latest_step(directory: str) -> Optional[int]:
+    """Newest *complete* step.  The LATEST pointer is only a fast path: if it
+    names a step whose dir fails the completeness check (e.g. a save was
+    killed mid-shard-write), fall back to scanning for the newest complete
+    dir — this is the crash-recovery contract run_with_recovery relies on.
+    Crashed re-saves are repaired first (their set-aside durable copy is
+    renamed back into place)."""
+    repair_interrupted_resaves(directory)
+    p = os.path.join(directory, LATEST)
+    if os.path.exists(p):
+        try:
+            with open(p) as f:
+                s = int(f.read().strip())
+            if is_complete(step_dir(directory, s)):
+                return s
+        except (OSError, ValueError):
+            pass  # unreadable/garbled pointer: fall back to the dir scan
+    steps = list_steps(directory, complete_only=True)
+    return steps[-1] if steps else None
+
+
+def write_latest(directory: str, step: int) -> None:
+    tmp = os.path.join(directory, ".LATEST.tmp")
+    with open(tmp, "w") as f:
+        f.write(str(step))
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, os.path.join(directory, LATEST))

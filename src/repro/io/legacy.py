@@ -1,0 +1,109 @@
+"""Legacy (format v1) single-file npz checkpoint backend.
+
+The seed format: every leaf gathered to one host and written into a single
+``arrays.npz`` next to a v1 manifest (no ``format_version`` key, no COMMIT
+marker — the tmp-dir rename was the atomicity unit).  Kept as a readable —
+and, for migration tooling, writable — backend behind the manifest's
+format-version switch; new saves go through ``repro.io.writer`` (sharded v2).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.io.format import sha_bytes, tree_structure_repr, write_latest
+
+__all__ = ["save_checkpoint_npz", "restore_npz"]
+
+
+def _sha(a: np.ndarray) -> str:
+    # the one checkpoint hash (v1 and v2 share it): format.sha_bytes
+    return sha_bytes(np.ascontiguousarray(a).tobytes())
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = jax.tree_util.keystr(path)
+        out.append((key, np.asarray(leaf)))
+    return out
+
+
+def save_checkpoint_npz(
+    directory: str, step: int, tree: Any, extra: Optional[Dict] = None
+) -> str:
+    """v1 atomic save: gather every leaf to this host, write one npz into a
+    tmp dir, fsync, rename, update LATEST.  Single-host only by construction
+    — this is exactly the gather-to-host-0 path the sharded format replaces."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
+    try:
+        leaves = _flatten_with_paths(tree)
+        arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "extra": extra or {},
+            "structure": tree_structure_repr(tree),
+            "leaves": [
+                {
+                    "key": key,
+                    "name": f"a{i}",
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "sha256": _sha(arr),
+                }
+                for i, (key, arr) in enumerate(leaves)
+            ],
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+    except BaseException:
+        shutil.rmtree(tmp, ignore_errors=True)
+        raise
+    write_latest(directory, step)
+    return final
+
+
+def restore_npz(
+    d: str,
+    manifest: Dict,
+    paths: List[str],
+    sh_leaves: Optional[List[jax.sharding.Sharding]],
+    validate: bool,
+) -> List[jax.Array]:
+    """Leaf arrays (in ``paths`` order) from a v1 dir.
+
+    Every leaf is placed with ``jax.device_put`` straight onto its target
+    sharding (default-device sharding when none was given) — the old path
+    built ``jnp.asarray(arr)`` on the default device first and re-sharded
+    from there, materializing each leaf twice."""
+    npz = np.load(os.path.join(d, "arrays.npz"))
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    default = jax.sharding.SingleDeviceSharding(jax.devices()[0])
+    out = []
+    for i, key in enumerate(paths):
+        if key not in by_key:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        m = by_key[key]
+        arr = npz[m["name"]]
+        if validate and _sha(arr) != m["sha256"]:
+            raise IOError(f"checkpoint corruption at {key} (hash mismatch)")
+        out.append(
+            jax.device_put(arr, sh_leaves[i] if sh_leaves is not None else default)
+        )
+    return out

@@ -1,0 +1,116 @@
+"""Checkpoint lifecycle manager: async saves + retention/GC.
+
+``CheckpointManager(dir, keep_last=N, keep_every=k)`` drives the sharded
+async writer and, after each successful COMMIT, deletes superseded step
+dirs: everything except the newest ``keep_last`` complete steps and (when
+``keep_every`` is set) steps divisible by ``keep_every`` (periodic archival
+anchors).  The newest complete step is never deleted, and incomplete dirs
+older than it (crash leftovers — shard files without COMMIT) are swept too.
+GC runs on the writer thread on process 0 only; it never races the save
+that triggered it because the worker commits before collecting.
+"""
+
+from __future__ import annotations
+
+import os
+import shutil
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.io import format as fmt
+from repro.io.reader import restore_checkpoint
+from repro.io.writer import AsyncCheckpointWriter
+
+__all__ = ["CheckpointManager"]
+
+
+class CheckpointManager:
+    """Async keep-last / keep-every manager over the sharded v2 format.
+
+    ``keep`` is the legacy alias for ``keep_last`` (pre-sharded API)."""
+
+    def __init__(
+        self,
+        directory: str,
+        keep_last: int = 3,
+        keep_every: Optional[int] = None,
+        keep: Optional[int] = None,
+    ):
+        if keep is not None:
+            keep_last = keep
+        self.directory = directory
+        self.keep_last = max(1, int(keep_last))
+        self.keep_every = int(keep_every) if keep_every else None
+        self._writer = AsyncCheckpointWriter(directory, on_commit=self._gc)
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False):
+        """Blocks only on the device->host snapshot (and when two saves are
+        already in flight); serialization + COMMIT happen in the background."""
+        self._writer.save(step, tree, extra, block=block)
+
+    def wait(self):
+        self._writer.wait()
+
+    def latest_step(self) -> Optional[int]:
+        # Drain in-flight saves first: latest_step's crash repair must not
+        # race the writer thread's final stage->step_X swap.
+        self.wait()
+        return fmt.latest_step(self.directory)
+
+    def restore(self, target, step=None, shardings=None):
+        self.wait()
+        return restore_checkpoint(self.directory, target, step, shardings)
+
+    def _gc(self, committed_step: Optional[int] = None):
+        if jax.process_index() != 0:
+            return
+        # One directory scan, one completeness check per step dir (each
+        # check parses that dir's manifest — with keep_every anchors the dir
+        # count grows over a run's lifetime, so no second pass).
+        steps: Dict[int, bool] = {}
+        attempt_dirs = []
+        for name in os.listdir(self.directory):
+            if ".attempt_" in name:
+                attempt_dirs.append(name)
+                continue
+            s = fmt.parse_step(name)
+            if s is not None:
+                steps[s] = fmt.is_complete(os.path.join(self.directory, name))
+        complete = sorted(s for s, ok in steps.items() if ok)
+        if committed_step is not None:
+            # Steps newer than the one just committed are leftovers of an
+            # abandoned timeline (a forced rewind replayed past them); left
+            # in place they would pin a keep_last slot forever and a lost
+            # LATEST pointer would resume from pre-rewind future state.
+            for s in complete:
+                if s > committed_step:
+                    shutil.rmtree(
+                        fmt.step_dir(self.directory, s), ignore_errors=True
+                    )
+            complete = [s for s in complete if s <= committed_step]
+        if not complete:
+            return
+        newest = complete[-1]
+        keep = set(complete[-self.keep_last:])
+        if self.keep_every:
+            keep.update(s for s in complete if s % self.keep_every == 0)
+        keep.add(newest)  # the newest complete step is never collected
+        for s in complete:
+            if s not in keep:
+                shutil.rmtree(fmt.step_dir(self.directory, s), ignore_errors=True)
+        # crash leftovers: incomplete dirs older than the newest complete
+        # save can never become restorable — sweep them too.  Newer
+        # incomplete dirs are a save in flight; leave them alone.
+        for s, ok in steps.items():
+            if s < newest and not ok:
+                shutil.rmtree(fmt.step_dir(self.directory, s), ignore_errors=True)
+        # orphaned staging dirs (step_X.attempt_<nonce>) from crashed saves:
+        # once their step has committed (or been superseded) they are dead
+        for name in attempt_dirs:
+            s = fmt.parse_step(name.split(".attempt_")[0])
+            if s is not None and s <= newest:
+                shutil.rmtree(
+                    os.path.join(self.directory, name), ignore_errors=True
+                )

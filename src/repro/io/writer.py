@@ -1,0 +1,381 @@
+"""Sharded checkpoint writer: per-host shard snapshot + async background I/O.
+
+Save never gathers: each host walks ``leaf.addressable_shards`` and copies
+only the shards it owns (``replica_id == 0`` — the one canonical copy of
+each distinct index) to host buffers, so the largest host-side allocation is
+one device shard, never a global array.  Packed 4-bit codes, their scales,
+and fp32 params all go through the same path — the quantized state stays
+sharded through I/O, which is the whole point of 4-bit states at scale.
+
+``AsyncCheckpointWriter`` double-buffers: ``save()`` blocks only on the
+device->host snapshot copy, hands the buffers to a background thread for
+serialization + fsync + COMMIT, and only ever blocks the train loop when a
+third save arrives while two are still in flight (one writing, one queued).
+
+The commit protocol (single-host and multi-host identical; cross-host
+rendezvous rides the shared checkpoint filesystem — never a device
+collective, which on this background thread could interleave with the train
+step's collectives and deadlock):
+  1. process 0 creates an attempt-unique staging dir
+     (``step_X.attempt_<nonce>``) and advertises it through an atomically
+     replaced pointer file; other hosts wait for the pointer;
+  2. every host writes + fsyncs its own ``host_<p>.bin`` into the stage,
+     then publishes ``index_host_<p>.json`` via temp + os.replace (the
+     index's existence implies its bin is durably complete); process 0
+     also writes ``manifest.json``;
+  3. process 0 waits for all hosts' index files, writes the ``COMMIT``
+     marker inside the stage, swaps the stage into ``step_X`` (setting an
+     existing committed copy aside until the replacement is fully on disk),
+     and updates the LATEST pointer.  A dir without COMMIT is incomplete
+     and ignored by ``latest_step`` — a save killed mid-shard-write can
+     never be restored.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+import uuid
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.io import format as fmt
+from repro.io.legacy import save_checkpoint_npz
+
+__all__ = ["Snapshot", "snapshot_tree", "write_snapshot", "save_checkpoint",
+           "AsyncCheckpointWriter"]
+
+
+def _device_to_host(key: str, shard_data) -> np.ndarray:
+    """Host copy of ONE device shard.  Every device->host byte the writer
+    moves funnels through here — the gather-spy test patches this to prove
+    no full global array is ever materialized during a sharded save."""
+    return np.ascontiguousarray(np.asarray(shard_data))
+
+
+def _bytes_view(arr: np.ndarray):
+    """Zero-copy byte view of a contiguous host array (serializing a shard
+    must not double its memory on the writer thread); ml_dtypes arrays that
+    can't export a PEP-3118 buffer fall back to one copy via tobytes()."""
+    try:
+        return memoryview(arr).cast("B")
+    except (TypeError, BufferError, ValueError):
+        return arr.tobytes()
+
+
+_RENDEZVOUS_TIMEOUT_S = 600.0
+
+
+def _barrier(name: str) -> None:
+    """Commit-protocol phase boundary.  Deliberately NOT a device collective:
+    this runs on the background writer thread, and a collective there could
+    interleave with the train step's collectives and deadlock a multi-host
+    run.  Cross-host rendezvous rides the shared checkpoint filesystem
+    instead (``_await`` below) — the same assumption the reader's index-file
+    merge already makes.  Kept as a named seam so tests can inject crashes
+    at exact protocol points."""
+
+
+def _await(predicate, what: str) -> None:
+    """Poll the shared filesystem until ``predicate()`` holds (multi-host
+    rendezvous without device collectives)."""
+    deadline = time.monotonic() + _RENDEZVOUS_TIMEOUT_S
+    while not predicate():
+        if time.monotonic() > deadline:
+            raise TimeoutError(f"checkpoint rendezvous timed out: {what}")
+        time.sleep(0.05)
+
+
+class _LeafSnapshot:
+    __slots__ = ("key", "shape", "dtype", "shards")
+
+    def __init__(self, key, shape, dtype, shards):
+        self.key = key
+        self.shape = tuple(int(d) for d in shape)
+        self.dtype = np.dtype(dtype)
+        # [(index ranges, host array)] — only the shards THIS host owns
+        self.shards: List[Tuple[List[Tuple[int, int]], np.ndarray]] = shards
+
+
+class Snapshot:
+    """Host-side copy of the shards this process owns, ready to serialize."""
+
+    def __init__(self, leaves: List[_LeafSnapshot], structure: str):
+        self.leaves = leaves
+        self.structure = structure
+
+
+def _leaf_snapshot(key: str, leaf) -> _LeafSnapshot:
+    if isinstance(leaf, jax.Array):
+        shape = tuple(leaf.shape)
+        shards = []
+        for s in leaf.addressable_shards:
+            if s.replica_id != 0:
+                continue  # exactly one host writes each distinct index
+            ranges = fmt.normalize_index(s.index, shape)
+            shards.append((ranges, _device_to_host(key, s.data)))
+        return _LeafSnapshot(key, shape, np.dtype(leaf.dtype), shards)
+    arr = np.ascontiguousarray(np.asarray(leaf))
+    shards = []
+    if jax.process_index() == 0:  # host leaves: one full shard, one writer
+        full = [(0, int(d)) for d in arr.shape]
+        shards.append((full, arr))
+    return _LeafSnapshot(key, arr.shape, arr.dtype, shards)
+
+
+def snapshot_tree(tree: Any) -> Snapshot:
+    """Blocking part of a save: device->host copies of owned shards only."""
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    leaves = [
+        _leaf_snapshot(jax.tree_util.keystr(path), leaf) for path, leaf in flat
+    ]
+    return Snapshot(leaves, fmt.tree_structure_repr(tree))
+
+
+def _fsync_write_json(path: str, obj) -> None:
+    """Durable JSON whose *existence* implies complete content: write to a
+    temp name, fsync, then os.replace into place."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def write_snapshot(
+    directory: str, step: int, snap: Snapshot, extra: Optional[Dict] = None
+) -> str:
+    """Serialize a snapshot: shard file + index per host, manifest + COMMIT
+    from process 0.  Safe to run on a background thread (touches no device).
+
+    Stage-and-swap: everything is written into an attempt-unique staging dir
+    (``step_X.attempt_<nonce>``, advertised to the other hosts through an
+    atomically-replaced pointer file), and only after COMMIT lands inside is
+    the staging dir swapped into ``step_X``.  Consequences: no host ever
+    writes into a directory another process might clear (a host acting on a
+    stale attempt pointer can only cause a rendezvous timeout, never a
+    mixed-attempt commit), and an existing committed copy of the step stays
+    durable on disk for the whole serialization — the vulnerable window is
+    the instant between the two final renames, which
+    ``repair_interrupted_resaves`` covers."""
+    os.makedirs(directory, exist_ok=True)
+    final = fmt.step_dir(directory, step)
+    backup = final + ".replaced"  # no step_* match — invisible to list_steps
+    p = jax.process_index()
+    nprocs = jax.process_count()
+    ptr = os.path.join(directory, f".attempt_step_{step:08d}")
+    if p == 0:
+        # purge leftovers of crashed attempts at this step BEFORE advertising
+        # a new stage: a host that latched onto a stale pointer/stage would
+        # otherwise starve this save's index rendezvous into its timeout
+        if os.path.exists(ptr):
+            os.remove(ptr)
+        for stale in glob.glob(glob.escape(final) + ".attempt_*"):
+            shutil.rmtree(stale, ignore_errors=True)
+        stage = final + f".attempt_{uuid.uuid4().hex[:8]}"
+        os.makedirs(stage)
+        if nprocs > 1:
+            tmp = ptr + ".tmp"
+            with open(tmp, "w") as f:
+                f.write(os.path.basename(stage))
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, ptr)
+    else:
+
+        def _resolve():
+            try:
+                with open(ptr) as f:
+                    name = f.read().strip()
+            except OSError:
+                return None
+            s = os.path.join(directory, name)
+            return s if os.path.isdir(s) else None
+
+        _await(lambda: _resolve() is not None, f"stage dir for step {step}")
+        stage = _resolve()
+    _barrier(f"ckpt_prepare_{step}")
+
+    offset = 0
+    index: Dict[str, Any] = {"process": p, "shards": {}}
+    with open(os.path.join(stage, fmt.shard_file(p)), "wb") as f:
+        for leaf in snap.leaves:
+            recs = []
+            for ranges, arr in leaf.shards:
+                buf = _bytes_view(arr)  # len(buf) == nbytes for both branches
+                f.write(buf)
+                recs.append(
+                    {
+                        "offset": offset,
+                        "nbytes": len(buf),
+                        "index": [list(r) for r in ranges],
+                        "sha256": fmt.sha_bytes(buf),
+                    }
+                )
+                offset += len(buf)
+            if recs:
+                index["shards"][leaf.key] = recs
+        f.flush()
+        os.fsync(f.fileno())
+    # index lands AFTER its bin is fsynced, via os.replace: once process 0
+    # can see it, this host's shard bytes are durably complete
+    _fsync_write_json(os.path.join(stage, fmt.index_file(p)), index)
+
+    if p == 0:
+        manifest = {
+            "format_version": fmt.FORMAT_VERSION,
+            "step": step,
+            "extra": extra or {},
+            "structure": snap.structure,
+            "num_hosts": nprocs,
+            "leaves": [
+                {
+                    "key": leaf.key,
+                    "shape": list(leaf.shape),
+                    "dtype": str(leaf.dtype),
+                }
+                for leaf in snap.leaves
+            ],
+        }
+        _fsync_write_json(os.path.join(stage, fmt.MANIFEST), manifest)
+
+    _barrier(f"ckpt_written_{step}")
+    if p != 0:
+        # Success on this host must imply durability: wait until process 0
+        # has swapped OUR stage into place (the stage name vanishes exactly
+        # at the swap) and the committed step is visible, so wait()/
+        # save(block=True) mean the same thing on every host.
+        _await(
+            lambda: not os.path.isdir(stage)
+            and os.path.exists(os.path.join(final, fmt.COMMIT)),
+            f"commit of step {step}",
+        )
+        return final
+    if nprocs > 1:
+        _await(
+            lambda: len(
+                glob.glob(os.path.join(glob.escape(stage), "index_host_*.json"))
+            )
+            >= nprocs,
+            f"all {nprocs} hosts' index files for step {step}",
+        )
+    with open(os.path.join(stage, fmt.COMMIT), "w") as f:
+        f.write(f"step {step}\n")
+        f.flush()
+        os.fsync(f.fileno())
+    # swap into place; an existing committed copy stays durable until the
+    # replacement (COMMIT included) is fully on disk.  Serialized against
+    # repair_interrupted_resaves, which could otherwise rename the backup
+    # back into place between our two renames.
+    with fmt.swap_lock:
+        if os.path.exists(final):
+            if fmt.is_complete(final):
+                if os.path.exists(backup):
+                    shutil.rmtree(backup)
+                os.rename(final, backup)
+            else:
+                shutil.rmtree(final)  # crash leftover
+        os.rename(stage, final)
+        fmt.write_latest(directory, step)
+        if os.path.exists(backup):
+            shutil.rmtree(backup, ignore_errors=True)
+    if nprocs > 1:
+        try:
+            os.remove(ptr)
+        except OSError:
+            pass
+    return final
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    tree: Any,
+    extra: Optional[Dict] = None,
+    *,
+    fmt_version: str = "sharded",
+) -> str:
+    """Synchronous save. ``fmt_version="sharded"`` (default) writes the v2
+    per-host shard format; ``"npz"`` writes the legacy v1 single-file format
+    (gather-to-host — only for migration tooling and format tests)."""
+    if fmt_version == "npz":
+        return save_checkpoint_npz(directory, step, tree, extra)
+    return write_snapshot(directory, step, snapshot_tree(tree), extra)
+
+
+class AsyncCheckpointWriter:
+    """Double-buffered background writer.
+
+    ``save()`` = snapshot (blocking, device->host only) + enqueue; a single
+    worker thread serializes in save order so LATEST always advances
+    monotonically.  At most two snapshots are in flight (one being written,
+    one queued): the train loop only stalls when it laps the writer twice.
+    Worker errors surface on the next ``save()``/``wait()``.
+    """
+
+    def __init__(self, directory: str, on_commit: Optional[Callable[[int], None]] = None):
+        self.directory = directory
+        self._on_commit = on_commit
+        self._queue: "queue.Queue" = queue.Queue()
+        self._slots = threading.Semaphore(2)  # the two buffers
+        self._error: Optional[BaseException] = None
+        self._thread: Optional[threading.Thread] = None
+
+    def _raise_pending(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _ensure_thread(self):
+        if self._thread is None or not self._thread.is_alive():
+            self._thread = threading.Thread(
+                target=self._worker, name="ckpt-writer", daemon=True
+            )
+            self._thread.start()
+
+    def _worker(self):
+        while True:
+            step, snap, extra = self._queue.get()
+            try:
+                write_snapshot(self.directory, step, snap, extra)
+                try:
+                    if self._on_commit is not None:
+                        self._on_commit(step)
+                except BaseException as e:
+                    # The save IS durable (COMMIT landed); a failed GC/
+                    # retention pass must not report it as failed.
+                    import warnings
+
+                    warnings.warn(f"checkpoint post-commit hook failed: {e!r}")
+            except BaseException as e:  # surfaced on next save()/wait()
+                if self._error is None:  # first failure wins
+                    self._error = e
+            finally:
+                self._slots.release()
+                self._queue.task_done()
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False):
+        self._raise_pending()
+        self._ensure_thread()
+        self._slots.acquire()  # wait only if two saves are already in flight
+        try:
+            snap = snapshot_tree(tree)  # the only device-blocking work
+        except BaseException:
+            self._slots.release()  # failed snapshot must not leak its buffer
+            raise
+        self._queue.put((step, snap, extra))
+        if block:
+            self.wait()
+
+    def wait(self):
+        self._queue.join()
+        self._raise_pending()

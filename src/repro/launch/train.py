@@ -16,7 +16,14 @@ Production-path flags:
                                abstractly (jax.eval_shape over
                                make_train_state — no throwaway concrete init,
                                so restore never doubles device memory) and
-                               re-sharded onto the current mesh.
+                               re-sharded onto the current mesh.  Saves use
+                               the sharded v2 format (repro.io): per-host
+                               shard files written on a background thread,
+                               COMMIT-marker atomicity.
+  --keep-last N / --keep-every K
+                               retention: keep the newest N complete steps
+                               plus every K-th step; superseded dirs are
+                               GC'd after each successful commit.
 """
 
 import argparse
@@ -35,7 +42,7 @@ from repro.core.optimizers import (
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.launch.mesh import make_mesh
 from repro.models import init_model
-from repro.train.checkpoint import CheckpointManager, latest_step
+from repro.train.checkpoint import CheckpointManager
 from repro.train.train_loop import (
     build_train_step,
     jit_train_step,
@@ -115,6 +122,12 @@ def main():
                          "needs D*M local devices")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--keep-last", type=int, default=3,
+                    help="retention: keep the newest N complete checkpoints "
+                         "(superseded step dirs are GC'd after each commit)")
+    ap.add_argument("--keep-every", type=int, default=None,
+                    help="retention: additionally keep every K-th step as a "
+                         "periodic archival anchor")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch) if args.reduced else get_config(args.arch)
@@ -147,8 +160,15 @@ def main():
         d, _, m = args.mesh.partition("x")
         mesh = make_mesh((int(d), int(m)), ("data", "model"))
 
-    mgr = CheckpointManager(args.ckpt_dir) if args.ckpt_dir else None
-    start = (latest_step(args.ckpt_dir) or 0) if args.ckpt_dir else 0
+    mgr = (
+        CheckpointManager(
+            args.ckpt_dir, keep_last=args.keep_last, keep_every=args.keep_every
+        )
+        if args.ckpt_dir
+        else None
+    )
+    # newest COMMIT-complete step: a save killed mid-write is skipped
+    start = (mgr.latest_step() or 0) if mgr else 0
 
     if start:
         # Elastic resume: abstract target + shardings for the current mesh.

@@ -1,195 +1,44 @@
-"""Checkpointing: atomic, async, content-hashed, keep-last-k.
+"""Checkpointing facade: the I/O lives in ``repro.io`` (sharded per-host v2
+format, async double-buffered writes, cross-mesh resharded restore, legacy
+npz readable behind the manifest's format-version switch); this module keeps
+the historical import surface plus the optimizer-state migration helper.
 
 Checkpoints store the *compressed* optimizer state (packed 4-bit codes +
 scales) directly — a 4-bit-AdamW checkpoint is ~7x smaller than an fp32-state
-checkpoint, which shrinks save/restore time and makes frequent checkpointing
-(the first line of fault tolerance) cheap. Restore re-shards onto whatever
-mesh is current, so an elastic restart with a different device count works
-from the same files.
-
-Layout:
-    <dir>/step_000100/
-        arrays.npz            # every array leaf, keyed by flattened path
-        manifest.json         # structure (treedef repr) + per-leaf key,
-                              # shape, dtype, sha256
-    <dir>/LATEST              # atomically-updated pointer
-
-The manifest's ``structure`` entry records the full pytree structure —
-including the optimizer transform-chain layout (``ChainState`` /
-``CompressedState`` / ``PartitionState`` nesting, per-leaf ``QuantConfig``) —
-so a restore into a structurally different target fails loudly with both
-reprs instead of silently misassigning leaves.  ``migrate_legacy_state``
-converts pre-chain ``{"m": ..., "v": ..., "step": ...}`` dict states into the
-``ChainState`` layout a transform chain expects.
+checkpoint — and the sharded format keeps it sharded through I/O: each host
+writes only the shards it owns, restore assembles whatever layout is on disk
+onto the current mesh.  See docs/checkpoints.md.
 """
 
 from __future__ import annotations
 
-import hashlib
-import json
-import os
-import shutil
-import tempfile
-import threading
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.optimizers.base import FactoredMoment
 from repro.core.quantizer import QuantizedTensor
+from repro.io import (  # noqa: F401  (re-exported public API)
+    AsyncCheckpointWriter,
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+    tree_structure_repr,
+)
 
 __all__ = [
     "save_checkpoint",
     "restore_checkpoint",
     "latest_step",
     "CheckpointManager",
+    "AsyncCheckpointWriter",
     "tree_structure_repr",
     "migrate_legacy_state",
 ]
 
 _STATE_LEAF = lambda x: isinstance(x, (QuantizedTensor, FactoredMoment))
-
-
-def tree_structure_repr(tree) -> str:
-    """Canonical structure string for manifest validation.
-
-    The treedef repr covers node types, arity, dict keys, and static aux data
-    — for optimizer states that includes the transform-chain nesting and each
-    ``QuantizedTensor``'s ``QuantConfig``."""
-    return str(jax.tree_util.tree_structure(tree))
-
-
-def _flatten_with_paths(tree) -> List[Tuple[str, np.ndarray]]:
-    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
-    out = []
-    for path, leaf in flat:
-        key = jax.tree_util.keystr(path)
-        out.append((key, np.asarray(leaf)))
-    return out
-
-
-def _sha(a: np.ndarray) -> str:
-    return hashlib.sha256(a.tobytes()).hexdigest()[:16]
-
-
-def save_checkpoint(directory: str, step: int, tree: Any, extra: Optional[Dict] = None) -> str:
-    """Atomic save: write to tmp dir, fsync, rename, update LATEST."""
-    os.makedirs(directory, exist_ok=True)
-    final = os.path.join(directory, f"step_{step:08d}")
-    tmp = tempfile.mkdtemp(dir=directory, prefix=".tmp_ckpt_")
-    try:
-        leaves = _flatten_with_paths(tree)
-        arrays = {f"a{i}": arr for i, (_, arr) in enumerate(leaves)}
-        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
-        manifest = {
-            "step": step,
-            "extra": extra or {},
-            "structure": tree_structure_repr(tree),
-            "leaves": [
-                {
-                    "key": key,
-                    "name": f"a{i}",
-                    "shape": list(arr.shape),
-                    "dtype": str(arr.dtype),
-                    "sha256": _sha(arr),
-                }
-                for i, (key, arr) in enumerate(leaves)
-            ],
-        }
-        with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
-            f.flush()
-            os.fsync(f.fileno())
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
-    except BaseException:
-        shutil.rmtree(tmp, ignore_errors=True)
-        raise
-    # atomic LATEST pointer
-    latest_tmp = os.path.join(directory, ".LATEST.tmp")
-    with open(latest_tmp, "w") as f:
-        f.write(str(step))
-        f.flush()
-        os.fsync(f.fileno())
-    os.replace(latest_tmp, os.path.join(directory, "LATEST"))
-    return final
-
-
-def latest_step(directory: str) -> Optional[int]:
-    p = os.path.join(directory, "LATEST")
-    if not os.path.exists(p):
-        return None
-    return int(open(p).read().strip())
-
-
-def restore_checkpoint(
-    directory: str,
-    target: Any,
-    step: Optional[int] = None,
-    shardings: Any = None,
-    validate: bool = True,
-) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``target`` (a pytree of arrays or
-    ShapeDtypeStructs). ``shardings`` (same structure) re-shards every leaf
-    onto the current mesh — elastic restart across device counts."""
-    if step is None:
-        step = latest_step(directory)
-        if step is None:
-            raise FileNotFoundError(f"no checkpoint in {directory}")
-    d = os.path.join(directory, f"step_{step:08d}")
-    manifest = json.load(open(os.path.join(d, "manifest.json")))
-    npz = np.load(os.path.join(d, "arrays.npz"))
-
-    if validate and "structure" in manifest:
-        got = tree_structure_repr(target)
-        if got != manifest["structure"]:
-            raise ValueError(
-                "checkpoint structure mismatch: the restore target's pytree "
-                "does not match what was saved.\n"
-                f"  saved:  {manifest['structure'][:512]}\n"
-                f"  target: {got[:512]}\n"
-                "If the checkpoint predates the transform-chain state layout "
-                "(dict {'m','v','step'}), restore into the legacy structure "
-                "and convert with migrate_legacy_state(state, tx)."
-            )
-
-    flat_target = jax.tree_util.tree_flatten_with_path(target)
-    paths = [jax.tree_util.keystr(p) for p, _ in flat_target[0]]
-    by_key = {m["key"]: m for m in manifest["leaves"]}
-
-    sh_leaves = None
-    if shardings is not None:
-        sh_leaves = jax.tree_util.tree_leaves(
-            shardings, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
-        )
-        if len(sh_leaves) != len(paths):
-            # tree_leaves drops None subtrees, which would silently shift
-            # every later leaf onto the wrong sharding — refuse instead.
-            raise ValueError(
-                f"shardings tree has {len(sh_leaves)} sharding leaves but the "
-                f"target has {len(paths)} array leaves; shardings must mirror "
-                "the target one sharding per leaf (no None placeholders)"
-            )
-
-    out = []
-    for i, key in enumerate(paths):
-        if key not in by_key:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        m = by_key[key]
-        arr = npz[m["name"]]
-        if validate and _sha(arr) != m["sha256"]:
-            raise IOError(f"checkpoint corruption at {key} (hash mismatch)")
-        if sh_leaves is not None:
-            out.append(jax.device_put(arr, sh_leaves[i]))
-        else:
-            out.append(jnp.asarray(arr))
-    tree = jax.tree_util.tree_unflatten(
-        jax.tree_util.tree_structure(target), out
-    )
-    return tree, manifest["extra"]
 
 
 def migrate_legacy_state(dict_state: Dict, tx, field_map: Optional[Dict[str, str]] = None):
@@ -289,53 +138,3 @@ def _namedtuple_fields(node, acc=None) -> set:
         for v in node:
             _namedtuple_fields(v, acc)
     return acc
-
-
-class CheckpointManager:
-    """Async keep-last-k manager: save() snapshots to host then writes on a
-    background thread; the train loop never blocks on disk."""
-
-    def __init__(self, directory: str, keep: int = 3):
-        self.directory = directory
-        self.keep = keep
-        self._thread: Optional[threading.Thread] = None
-        self._error: Optional[BaseException] = None
-
-    def wait(self):
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
-        if self._error is not None:
-            err, self._error = self._error, None
-            raise err
-
-    def save(self, step: int, tree: Any, extra: Optional[Dict] = None, block: bool = False):
-        self.wait()  # one in flight at a time
-        host_tree = jax.tree_util.tree_map(lambda x: np.asarray(x), tree)
-
-        def _work():
-            try:
-                save_checkpoint(self.directory, step, host_tree, extra)
-                self._gc()
-            except BaseException as e:  # surfaced on next wait()
-                self._error = e
-
-        self._thread = threading.Thread(target=_work, daemon=True)
-        self._thread.start()
-        if block:
-            self.wait()
-
-    def _gc(self):
-        steps = sorted(
-            int(n.split("_")[1])
-            for n in os.listdir(self.directory)
-            if n.startswith("step_")
-        )
-        for s in steps[: -self.keep]:
-            shutil.rmtree(
-                os.path.join(self.directory, f"step_{s:08d}"), ignore_errors=True
-            )
-
-    def restore(self, target, step=None, shardings=None):
-        self.wait()
-        return restore_checkpoint(self.directory, target, step, shardings)

@@ -14,6 +14,9 @@ Components:
     pipeline is stateless) and decide restore-from-checkpoint.
   * run_with_recovery — drives a train loop with simulated failures:
     on failure, restore latest checkpoint, re-plan, continue.
+  * checkpoint_hooks — wires run_with_recovery's (save, restore_latest)
+    callbacks onto a sharded ``repro.io.CheckpointManager``: async saves,
+    and restore that falls back past incomplete (uncommitted) save dirs.
 """
 
 from __future__ import annotations
@@ -21,11 +24,17 @@ from __future__ import annotations
 import collections
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-__all__ = ["StragglerDetector", "HostMonitor", "ElasticPlan", "run_with_recovery"]
+__all__ = [
+    "StragglerDetector",
+    "HostMonitor",
+    "ElasticPlan",
+    "run_with_recovery",
+    "checkpoint_hooks",
+]
 
 
 class StragglerDetector:
@@ -110,6 +119,59 @@ def plan_elastic(
             f"only {len(hosts)} hosts alive, below minimum {min_hosts}"
         )
     return ElasticPlan(hosts=hosts, restore_step=latest_checkpoint)
+
+
+def checkpoint_hooks(
+    manager,
+    get_state: Callable[[], object],
+    set_state: Callable[[object], None],
+    make_target: Callable[[], object],
+    make_shardings: Optional[Callable[[], object]] = None,
+) -> Tuple[Callable[[int], None], Callable[[], int]]:
+    """(save, restore_latest) callbacks for ``run_with_recovery`` backed by a
+    sharded ``repro.io.CheckpointManager``.
+
+    ``save(step)`` snapshots ``get_state()`` and returns as soon as the
+    device->host copy is done (serialization + COMMIT run in the background).
+    ``restore_latest()`` restores the newest *complete* step — a save that
+    was killed mid-shard-write (no COMMIT marker, truncated shard file) is
+    skipped, so recovery lands on the last committed state — hands it to
+    ``set_state``, and returns the step to resume from (0 when no complete
+    checkpoint exists).  ``make_target`` builds the abstract restore target;
+    ``make_shardings`` (optional) supplies shardings for the current mesh so
+    an elastic restart re-shards on the way in.
+    """
+
+    def save(step: int) -> None:
+        manager.save(step, get_state())
+
+    def restore_latest() -> int:
+        # manager.latest_step drains in-flight saves itself, so the step it
+        # reports cannot be superseded (and GC'd) by a pending async commit.
+        try:
+            step = manager.latest_step()
+        except Exception as e:
+            # A background save that failed (ENOSPC, disk fault) must not
+            # abort recovery — falling back to the last COMMIT-complete step
+            # is this function's whole contract.  The writer queue is
+            # drained by the time wait() re-raises, so a direct scan of the
+            # directory cannot race an in-flight commit.
+            import warnings
+
+            from repro.io import format as _ckfmt
+
+            warnings.warn(
+                f"discarding failed async checkpoint save during recovery: {e!r}"
+            )
+            step = _ckfmt.latest_step(manager.directory)
+        if step is None:
+            return 0
+        shardings = make_shardings() if make_shardings is not None else None
+        state, _ = manager.restore(make_target(), step=step, shardings=shardings)
+        set_state(state)
+        return step
+
+    return save, restore_latest
 
 
 def run_with_recovery(

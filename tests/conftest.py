@@ -1,14 +1,20 @@
 """Test-process setup.
 
-Forces 8 host (CPU) devices BEFORE any jax import so mesh/sharding tests can
-exercise real multi-device layouts (2x4, 4x2, 8x1) in-process.  Single-device
-tests are unaffected: unsharded computations run on device 0 as before.
+Forces host (CPU) devices BEFORE any jax import so mesh/sharding tests can
+exercise real multi-device layouts (2x4, 4x2, 8x1) in-process.  The count
+defaults to 8 and is overridable with REPRO_FORCE_DEVICES — the CI
+checkpoint matrix runs the roundtrip/resume suites under both 1 and 8
+devices so the single-device and sharded I/O code paths both gate every PR.
+Single-device tests are unaffected: unsharded computations run on device 0
+as before; tests that need >=8 devices skip themselves under a forced
+single-device run.
 """
 
 import os
 
+_n = os.environ.get("REPRO_FORCE_DEVICES", "8")
 if "--xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", ""):
     os.environ["XLA_FLAGS"] = (
         os.environ.get("XLA_FLAGS", "")
-        + " --xla_force_host_platform_device_count=8"
+        + f" --xla_force_host_platform_device_count={_n}"
     ).strip()

@@ -45,6 +45,12 @@ from repro.train.train_loop import (
 
 jax.config.update("jax_platform_name", "cpu")
 
+# mesh tests need the multi-device harness (conftest forces 8 CPU devices by
+# default; the CI checkpoint matrix also runs with REPRO_FORCE_DEVICES=1)
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs the 8-device host harness"
+)
+
 MICRO_CFG = ModelConfig(
     name="micro-lm",
     num_layers=1,
@@ -182,6 +188,7 @@ def _mesh_step(opt, mesh, axes, state):
 
 
 @pytest.mark.slow
+@needs_8_devices
 @pytest.mark.parametrize(
     "name,overrides",
     [("adamw4bit", {"stochastic_rounding": True}), ("production4bit", {})],
@@ -219,6 +226,7 @@ def test_mesh_resume_bit_exact(name, overrides, tmp_path):
 
 
 @pytest.mark.slow
+@needs_8_devices
 def test_elastic_restore_different_mesh_layout(tmp_path):
     """A checkpoint saved on (2,4) restores and trains on (4,2) — elastic
     restart across layouts (numerics may differ in reduction order, so this

@@ -1,0 +1,473 @@
+"""Sharded checkpoint I/O subsystem (repro.io): format v2 invariants.
+
+The enforced contracts:
+  * a sharded save writes per-host shard files and never materializes a full
+    global array on any host (gather-spy over the writer's device->host seam
+    on the 8-device harness), and restore assembles per-device regions only;
+  * save -> restore is bit-exact across mesh layouts — packed 4-bit codes,
+    scales, fp32 params alike — including 2x4 -> 4x2 elastic restore;
+  * ``CheckpointManager.save`` returns before serialization completes
+    (blocking only on the snapshot copy) and the COMMIT marker lands last;
+  * retention GC keeps (keep_last ∪ keep_every-multiples ∪ newest) and
+    sweeps crash leftovers;
+  * the legacy v1 npz format stays readable behind the manifest's
+    format-version switch.
+"""
+
+import json
+import os
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.optimizers import make_optimizer
+from repro.core.quantizer import QuantizedTensor
+from repro.io import (
+    CheckpointManager,
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.io import format as ckfmt, reader, writer
+from repro.models import LayerSpec, ModelConfig, init_model
+from repro.train.train_loop import make_train_state, train_state_shardings
+
+jax.config.update("jax_platform_name", "cpu")
+
+needs_8_devices = pytest.mark.skipif(
+    len(jax.devices()) < 8, reason="needs the 8-device host harness"
+)
+
+MICRO_CFG = ModelConfig(
+    name="micro-lm",
+    num_layers=1,
+    d_model=64,
+    num_heads=2,
+    num_kv_heads=1,
+    head_dim=32,
+    d_ff=128,
+    vocab_size=256,  # embed = 256*64 = 16384 elements > threshold -> quantized
+    blocks=(LayerSpec("dense", 0),),
+    remat=False,
+)
+
+
+def _nonzero_state(opt_name="production4bit"):
+    """A TrainState with non-trivial quantized moments (2 eager update steps
+    on synthetic grads — no jit compile, keeps the 1-device matrix leg fast)."""
+    opt = make_optimizer(opt_name, 3e-3)
+    params, axes = init_model(jax.random.PRNGKey(0), MICRO_CFG)
+    state = make_train_state(params, opt, key=jax.random.PRNGKey(5))
+    rng = np.random.default_rng(7)
+    p, s = state.params, state.opt_state
+    for t in range(2):
+        grads = jax.tree_util.tree_map(
+            lambda x: jnp.asarray(
+                rng.normal(size=x.shape).astype(np.float32) * 0.02
+            ),
+            p,
+        )
+        p, s = opt.update(grads, s, p, key=jax.random.fold_in(state.key, t))
+    from repro.train.train_loop import TrainState
+
+    return TrainState(p, s, jnp.asarray(2, jnp.int32), state.key), axes
+
+
+def _flat_with_keys(tree):
+    return [
+        (jax.tree_util.keystr(path), leaf)
+        for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]
+    ]
+
+
+def _assert_trees_bitwise(a, b, what=""):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb, f"{what}: tree structure mismatch"
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y), err_msg=what)
+
+
+# ---------------------------------------------------------------------------
+# format v2 on-disk schema
+# ---------------------------------------------------------------------------
+
+
+def test_manifest_v2_schema(tmp_path):
+    tree = {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "n": jnp.asarray(3, jnp.int32)}
+    d = str(tmp_path / "c")
+    path = save_checkpoint(d, 5, tree, extra={"note": "hi"})
+    names = sorted(os.listdir(path))
+    assert names == ["COMMIT", "host_00000.bin", "index_host_00000.json",
+                     "manifest.json"]
+    manifest = json.load(open(os.path.join(path, "manifest.json")))
+    assert manifest["format_version"] == 2
+    assert manifest["step"] == 5 and manifest["extra"] == {"note": "hi"}
+    assert manifest["num_hosts"] == 1 and "structure" in manifest
+    by_key = {m["key"]: m for m in manifest["leaves"]}
+    assert by_key["['w']"]["shape"] == [3, 4]
+    assert by_key["['w']"]["dtype"] == "float32"
+    idx = json.load(open(os.path.join(path, "index_host_00000.json")))
+    assert idx["process"] == 0
+    recs = idx["shards"]["['w']"]
+    total = sum(r["nbytes"] for r in recs)
+    assert total == 12 * 4
+    for r in recs:
+        assert len(r["index"]) == 2 and len(r["sha256"]) == 16
+    assert latest_step(d) == 5
+
+
+def test_incomplete_dir_ignored_and_fallback(tmp_path):
+    """A save killed mid-shard-write (truncated bin, no COMMIT) is invisible
+    to latest_step; restore lands on the last complete step."""
+    tree = {"w": jnp.arange(64, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 5, tree)
+    crashed = save_checkpoint(d, 9, tree)
+    # simulate the kill: COMMIT never written, shard file cut short
+    os.remove(os.path.join(crashed, "COMMIT"))
+    bin_path = os.path.join(crashed, "host_00000.bin")
+    with open(bin_path, "r+b") as f:
+        f.truncate(os.path.getsize(bin_path) // 2)
+    # LATEST still points at 9 — the completeness check must override it
+    assert latest_step(d) == 5
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_truncated_shard_with_commit_raises(tmp_path):
+    """Truncation *behind* a COMMIT (disk fault, not a crash) is corruption:
+    restore must raise, not silently zero-fill."""
+    tree = {"w": jnp.arange(64, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    path = save_checkpoint(d, 1, tree)
+    bin_path = os.path.join(path, "host_00000.bin")
+    with open(bin_path, "r+b") as f:
+        f.truncate(os.path.getsize(bin_path) - 8)
+    with pytest.raises(IOError, match="truncated"):
+        restore_checkpoint(d, jax.eval_shape(lambda: tree))
+
+
+def test_legacy_npz_readable_behind_version_switch(tmp_path):
+    """v1 dirs (arrays.npz, no format_version, no COMMIT) restore through
+    the same entry point, and count as complete for latest_step."""
+    state, _ = _nonzero_state("adamw4bit")
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 4, state, fmt_version="npz")
+    assert not os.path.exists(os.path.join(d, "step_00000004", "COMMIT"))
+    assert latest_step(d) == 4
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: state))
+    _assert_trees_bitwise(restored, state, "legacy npz roundtrip")
+
+
+# ---------------------------------------------------------------------------
+# sharded save/restore on the 8-device harness
+# ---------------------------------------------------------------------------
+
+
+def _sharded_state_on(mesh, state, axes, zero=True):
+    shardings = train_state_shardings(state, axes, mesh, zero=zero)
+    return jax.device_put(state, shardings), shardings
+
+
+@needs_8_devices
+def test_elastic_reshard_2x4_to_4x2_bitwise(tmp_path):
+    """Save on (2,4), restore onto (4,2) AND onto a single device: every
+    leaf — packed 4-bit codes, scales, fp32 params, the SR key — bit-exact."""
+    state, axes = _nonzero_state()
+    mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+    sharded, _ = _sharded_state_on(mesh1, state, axes)
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 2, sharded)
+
+    target = jax.eval_shape(lambda: state)
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    shardings2 = train_state_shardings(target, axes, mesh2, zero=True)
+    restored, _ = restore_checkpoint(d, target, shardings=shardings2)
+    _assert_trees_bitwise(restored, state, "2x4 -> 4x2 reshard")
+    # spot-check the restored layout actually lives on mesh2
+    flat = [l for _, l in _flat_with_keys(restored)]
+    assert any(
+        isinstance(l, jax.Array) and not l.sharding.is_fully_replicated
+        for l in flat
+    ), "restore produced no sharded leaves — shardings were ignored"
+
+    single, _ = restore_checkpoint(d, target)  # no shardings: default device
+    _assert_trees_bitwise(single, state, "2x4 -> single device")
+    # quantized moments survive as QuantizedTensor leaves with packed codes
+    q = [l for _, l in _flat_with_keys(single)]
+    assert any(np.asarray(x).dtype == np.uint8 for x in q), "no packed codes?"
+
+
+@needs_8_devices
+def test_gather_spy_save_never_materializes_global(tmp_path, monkeypatch):
+    """Every device->host byte the writer moves goes through
+    ``writer._device_to_host``; for leaves that are actually split across
+    devices, no single copy may be global-sized."""
+    state, axes = _nonzero_state()
+    mesh = jax.make_mesh((2, 4), ("data", "model"))
+    sharded, _ = _sharded_state_on(mesh, state, axes)
+
+    global_nbytes = {}   # leaf key -> global nbytes
+    split = set()        # keys split into >1 distinct shard index
+    for key, leaf in _flat_with_keys(sharded):
+        if not isinstance(leaf, jax.Array):
+            continue
+        global_nbytes[key] = leaf.size * np.dtype(leaf.dtype).itemsize
+        idx = {
+            tuple(map(tuple, ckfmt.normalize_index(s.index, leaf.shape)))
+            for s in leaf.addressable_shards
+        }
+        if len(idx) > 1:
+            split.add(key)
+    assert split, "harness bug: nothing is sharded, the spy would prove nothing"
+
+    copies = []
+    real = writer._device_to_host
+    monkeypatch.setattr(
+        writer, "_device_to_host",
+        lambda key, data: copies.append((key, np.asarray(data).nbytes))
+        or real(key, data),
+    )
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 1, sharded)
+    assert copies, "spy never fired — writer bypassed the seam"
+    for key, nbytes in copies:
+        if key in split:
+            assert nbytes < global_nbytes[key], (
+                f"save materialized a full global copy of split leaf {key}"
+            )
+
+
+@needs_8_devices
+def test_gather_spy_restore_assembles_regions_only(tmp_path, monkeypatch):
+    """Restoring onto a sharded target allocates per-device regions, never a
+    full global array, for every split target leaf — even when the on-disk
+    layout (2x4) differs from the target (4x2)."""
+    state, axes = _nonzero_state()
+    mesh1 = jax.make_mesh((2, 4), ("data", "model"))
+    sharded, _ = _sharded_state_on(mesh1, state, axes)
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 1, sharded)
+
+    target = jax.eval_shape(lambda: state)
+    mesh2 = jax.make_mesh((4, 2), ("data", "model"))
+    shardings2 = train_state_shardings(target, axes, mesh2, zero=True)
+    sh_leaves = jax.tree_util.tree_leaves(
+        shardings2, is_leaf=lambda x: isinstance(x, jax.sharding.Sharding)
+    )
+    keys = [k for k, _ in _flat_with_keys(target)]
+    split = {
+        k
+        for k, sh, (_, t) in zip(
+            keys, sh_leaves, jax.tree_util.tree_flatten_with_path(target)[0]
+        )
+        if not sh.is_fully_replicated and int(np.prod(t.shape or (1,))) > 1
+    }
+    assert split, "harness bug: target has no split leaves"
+    global_nbytes = {
+        k: int(np.prod(t.shape, dtype=np.int64)) * np.dtype(t.dtype).itemsize
+        for k, (_, t) in zip(keys, jax.tree_util.tree_flatten_with_path(target)[0])
+    }
+
+    regions = []
+    real = reader._alloc_region
+    monkeypatch.setattr(
+        reader, "_alloc_region",
+        lambda key, shape, dtype: regions.append(
+            (key, int(np.prod(shape, dtype=np.int64)) * np.dtype(dtype).itemsize)
+        )
+        or real(key, shape, dtype),
+    )
+    restored, _ = restore_checkpoint(d, target, shardings=shardings2)
+    assert regions, "spy never fired — reader bypassed the seam"
+    for key, nbytes in regions:
+        if key in split:
+            assert nbytes < global_nbytes[key], (
+                f"restore allocated a full global region for split leaf {key}"
+            )
+    _assert_trees_bitwise(restored, state, "spied restore is still bit-exact")
+
+
+# ---------------------------------------------------------------------------
+# async writer semantics
+# ---------------------------------------------------------------------------
+
+
+def test_async_save_returns_before_serialization(tmp_path, monkeypatch):
+    """save() blocks only on the snapshot copy: it must return while the
+    background serialization is still in flight; COMMIT lands at wait()."""
+    gate = threading.Event()
+    started = threading.Event()
+    real = writer.write_snapshot
+
+    def gated(directory, step, snap, extra=None):
+        started.set()
+        assert gate.wait(30), "test gate never opened"
+        return real(directory, step, snap, extra)
+
+    monkeypatch.setattr(writer, "write_snapshot", gated)
+    tree = {"w": jnp.arange(4096, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    mgr = CheckpointManager(d)
+    mgr.save(1, tree)  # must NOT block on the gated serialization
+    assert started.wait(30), "background writer never started"
+    assert not os.path.exists(os.path.join(d, "step_00000001", "COMMIT"))
+
+    # double buffering: a SECOND save may also proceed (one writing, one
+    # queued); only a third would block.  Run it on a thread to bound time.
+    second_done = threading.Event()
+    t = threading.Thread(
+        target=lambda: (mgr.save(2, tree), second_done.set()), daemon=True
+    )
+    t.start()
+    assert second_done.wait(30), "second save blocked — writer is not double-buffered"
+
+    gate.set()
+    mgr.wait()
+    assert os.path.exists(os.path.join(d, "step_00000002", "COMMIT"))
+    assert latest_step(d) == 2
+
+
+def test_async_writer_surfaces_errors(tmp_path, monkeypatch):
+    def boom(directory, step, snap, extra=None):
+        raise RuntimeError("disk on fire")
+
+    monkeypatch.setattr(writer, "write_snapshot", boom)
+    mgr = CheckpointManager(str(tmp_path / "c"))
+    mgr.save(1, {"w": jnp.zeros(4)})
+    with pytest.raises(RuntimeError, match="disk on fire"):
+        mgr.wait()
+
+
+def test_async_roundtrip_through_manager(tmp_path):
+    state, _ = _nonzero_state("adamw4bit")
+    mgr = CheckpointManager(str(tmp_path / "c"))
+    mgr.save(3, state, extra={"k": 1})
+    restored, extra = mgr.restore(jax.eval_shape(lambda: state))
+    assert extra == {"k": 1}
+    _assert_trees_bitwise(restored, state, "manager async roundtrip")
+
+
+# ---------------------------------------------------------------------------
+# retention / GC
+# ---------------------------------------------------------------------------
+
+
+def _steps_on_disk(d):
+    return sorted(
+        ckfmt.parse_step(n) for n in os.listdir(d) if n.startswith("step_")
+    )
+
+
+def test_retention_keep_last_and_keep_every(tmp_path):
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    mgr = CheckpointManager(d, keep_last=2, keep_every=4)
+    for s in range(1, 9):
+        mgr.save(s, tree, block=True)
+    assert _steps_on_disk(d) == [4, 7, 8]  # keep_every: 4, 8; keep_last: 7, 8
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree), step=4)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_gc_never_deletes_newest_complete(tmp_path):
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    mgr = CheckpointManager(d, keep_last=1)
+    mgr.save(1, tree, block=True)
+    assert _steps_on_disk(d) == [1]
+    mgr.save(2, tree, block=True)
+    assert _steps_on_disk(d) == [2]
+
+
+def test_resave_keeps_durable_copy_until_commit(tmp_path, monkeypatch):
+    """Re-saving an already-committed step (replay after a forced rewind)
+    must not destroy the durable copy before the replacement commits: the
+    new attempt serializes into a staging dir and only swaps in at the end,
+    so a kill mid-serialization leaves the original step fully intact."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    path = save_checkpoint(d, 1, tree)
+
+    real = writer._barrier
+
+    def dying_barrier(name):
+        if name.startswith("ckpt_written"):
+            raise RuntimeError("killed between shard write and COMMIT")
+        return real(name)
+
+    monkeypatch.setattr(writer, "_barrier", dying_barrier)
+    with pytest.raises(RuntimeError, match="killed"):
+        save_checkpoint(d, 1, {"w": jnp.arange(8, dtype=jnp.float32) * 2})
+    # the original committed step was never touched — only an orphaned
+    # staging dir remains, invisible to step discovery
+    assert ckfmt.is_complete(path)
+    assert latest_step(d) == 1
+    assert any(".attempt_" in n for n in os.listdir(d))
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+    monkeypatch.setattr(writer, "_barrier", real)
+    new_tree = {"w": jnp.arange(8, dtype=jnp.float32) * 2}
+    save_checkpoint(d, 1, new_tree)  # retry succeeds and replaces
+    assert ckfmt.is_complete(path)
+    assert not os.path.exists(path + ".replaced"), "backup not cleaned up"
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(new_tree["w"]))
+
+
+def test_repair_restores_set_aside_copy(tmp_path):
+    """The one vulnerable instant of the swap is between rename(final ->
+    .replaced) and rename(stage -> final); a kill there leaves only the
+    .replaced durable copy, which latest_step repairs back into place."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    path = save_checkpoint(d, 1, tree)
+    os.rename(path, path + ".replaced")  # simulate the mid-swap kill
+    assert latest_step(d) == 1
+    assert ckfmt.is_complete(path) and not os.path.exists(path + ".replaced")
+    restored, _ = restore_checkpoint(d, jax.eval_shape(lambda: tree))
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+
+def test_gc_drops_abandoned_timeline_after_rewind(tmp_path):
+    """After a forced rewind, committing an older step collects the stale
+    future steps of the abandoned timeline (they would otherwise pin
+    keep_last slots and confuse a fallback latest_step scan forever)."""
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    mgr = CheckpointManager(d, keep_last=3)
+    for s in (10, 20, 30):
+        mgr.save(s, tree, block=True)
+    mgr.save(15, tree, block=True)  # rewound to 10, replayed to 15
+    assert _steps_on_disk(d) == [10, 15], "stale future steps not collected"
+    assert latest_step(d) == 15
+
+
+def test_restore_target_with_plain_scalar_leaf(tmp_path):
+    """Concrete targets may carry plain Python scalars (no .shape); the v2
+    reader must restore around them instead of raising AttributeError."""
+    tree = {"w": jnp.arange(4, dtype=jnp.float32), "n": 3}
+    d = str(tmp_path / "c")
+    save_checkpoint(d, 1, tree)
+    restored, _ = restore_checkpoint(d, tree)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert np.asarray(restored["n"]).item() == 3
+
+
+def test_gc_sweeps_crash_leftovers(tmp_path):
+    tree = {"w": jnp.arange(8, dtype=jnp.float32)}
+    d = str(tmp_path / "c")
+    mgr = CheckpointManager(d, keep_last=3)
+    mgr.save(1, tree, block=True)
+    crashed = save_checkpoint(d, 2, tree)
+    os.remove(os.path.join(crashed, "COMMIT"))  # simulated kill
+    mgr.save(3, tree, block=True)  # commit + GC
+    assert 2 not in _steps_on_disk(d), "incomplete crash leftover not swept"
+    assert _steps_on_disk(d) == [1, 3]

@@ -59,7 +59,20 @@ def test_checkpoint_detects_corruption(tmp_path):
     cfg, opt, state = _tiny_state()
     d = str(tmp_path / "ckpt")
     path = save_checkpoint(d, 1, state)
-    # corrupt the array file
+    # corrupt this host's shard file (v2 format: per-host .bin + COMMIT)
+    bin_path = os.path.join(path, "host_00000.bin")
+    data = bytearray(open(bin_path, "rb").read())
+    data[len(data) // 2] ^= 0xFF
+    open(bin_path, "wb").write(bytes(data))
+    with pytest.raises(Exception):
+        restore_checkpoint(d, jax.eval_shape(lambda: state))
+
+
+def test_checkpoint_detects_corruption_legacy_npz(tmp_path):
+    """The v1 single-file format stays readable — and stays hash-checked."""
+    cfg, opt, state = _tiny_state()
+    d = str(tmp_path / "ckpt")
+    path = save_checkpoint(d, 1, state, fmt_version="npz")
     npz_path = os.path.join(path, "arrays.npz")
     data = bytearray(open(npz_path, "rb").read())
     data[len(data) // 2] ^= 0xFF
