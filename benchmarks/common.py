@@ -8,6 +8,8 @@ optimizer without extra hyperparameter tuning").
 
 from __future__ import annotations
 
+import dataclasses
+import os
 import time
 from typing import Dict, List, Tuple
 
@@ -79,3 +81,73 @@ def emit(rows: List[Tuple[str, float, str]]):
     """Print the required ``name,us_per_call,derived`` CSV rows."""
     for name, us, derived in rows:
         print(f"{name},{us:.1f},{derived}")
+
+
+def stacked_leaf_update_stats(
+    L: int = 24, R: int = 128, C: int = 512, steps: int = 20
+) -> Dict[str, float]:
+    """Fused stacked-leaf step metrics for an (L, R, C) transformer-block
+    stack — e.g. L=24 is a 24-layer stack of d_model=128 / d_ff=512 blocks.
+
+    Returns the Pallas launch count (structural: traced under the interpret
+    kernel backend, so it is the same figure a TPU run would launch) and the
+    wall-clock of the jitted leaf update on the default backend (``ref`` on
+    CPU — same trace shape, honest step timing).  The launch count is the
+    drift-gated number: it must stay 1 (the single-launch 3-d-grid
+    invariant); wall-clock is recorded for the trajectory but not gated
+    (CI machines are too noisy for exact step-time equality).
+    """
+    from repro.core.optimizers.adamw import M_4BIT, V_4BIT
+    from repro.core.quantizer import quantize
+    from repro.kernels import ops as kernel_ops
+
+    rng = np.random.default_rng(0)
+    m_cfg = dataclasses.replace(M_4BIT, stochastic_rounding=True)
+    v_cfg = dataclasses.replace(V_4BIT, stochastic_rounding=True)
+    p = jnp.asarray(rng.normal(size=(L, R, C)).astype(np.float32) * 0.1)
+    g = jnp.asarray(rng.normal(size=(L, R, C)).astype(np.float32) * 0.01)
+    m_q = quantize(
+        jnp.asarray(rng.normal(size=(L, R, C)).astype(np.float32) * 0.01), m_cfg
+    )
+    v_q = quantize(
+        jnp.abs(jnp.asarray(rng.normal(size=(L, R, C)).astype(np.float32)))
+        * 1e-3
+        + 1e-10,
+        v_cfg,
+    )
+    lr, bc1, bc2 = jnp.float32(3e-3), jnp.float32(0.1), jnp.float32(0.001)
+
+    def step(p, g, m_q, v_q, key):
+        return kernel_ops.fused_adamw4_leaf(
+            p, g, m_q, v_q, lr, 0.9, 0.999, 1e-8, 0.01, bc1, bc2, key=key
+        )
+
+    key = jax.random.PRNGKey(0)
+
+    # Launch count: trace with the kernel routed (interpret backend) — the
+    # number of pallas_call equations is what a compiled TPU step launches.
+    saved = os.environ.get("REPRO_KERNEL_BACKEND")
+    os.environ["REPRO_KERNEL_BACKEND"] = "interpret"
+    try:
+        jaxpr = jax.make_jaxpr(step)(p, g, m_q, v_q, key)
+        launches = kernel_ops.count_pallas_calls(jaxpr)
+    finally:
+        if saved is None:
+            del os.environ["REPRO_KERNEL_BACKEND"]
+        else:
+            os.environ["REPRO_KERNEL_BACKEND"] = saved
+
+    fn = jax.jit(step)
+    jax.block_until_ready(fn(p, g, m_q, v_q, key))  # compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        out = fn(p, g, m_q, v_q, key)
+    jax.block_until_ready(out)
+    wall = time.perf_counter() - t0
+    return {
+        "L": L,
+        "R": R,
+        "C": C,
+        "launch_count": int(launches),
+        "us_per_step": wall / steps * 1e6,
+    }

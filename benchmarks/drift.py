@@ -10,6 +10,10 @@ a small deterministic JSON-able dict:
 * memory — optimizer-state bytes on the GPT-2-Medium-shaped tree
   (``eval_shape`` only, no allocation) and the production/fp32 ratio.
   Structural, so it must reproduce exactly anywhere.
+* stacked — the fused stacked-leaf update on an L=24 transformer-block
+  stack: the Pallas launch count (structural; gated EXACTLY at its baseline
+  of 1 — the single-launch 3-d-grid invariant) and the step wall-clock
+  (recorded for the per-PR trajectory, not gated: CI machines are noisy).
 
 ``compare()`` checks a freshly computed dict against the tracked baseline
 (``benchmarks/results/baseline.json``) within tolerances; the CI job
@@ -25,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import train_small_lm
+from benchmarks.common import stacked_leaf_update_stats, train_small_lm
 from benchmarks.tables import _gpt2m_like_params
 from repro.core.optimizers import make_optimizer, state_nbytes
 
@@ -65,6 +69,7 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
 
     b32 = state_bytes("adamw32")
     bprod = state_bytes("production4bit")
+    stacked = stacked_leaf_update_stats()
     return {
         "meta": {"steps": steps, "sr_seed": SR_SEED, "lr": 3e-3},
         "quality": {
@@ -78,6 +83,13 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
             "adamw32_state_bytes": int(b32),
             "production4bit_state_bytes": int(bprod),
             "ratio": round(bprod / b32, 6),
+        },
+        "stacked": {
+            "L": stacked["L"],
+            "R": stacked["R"],
+            "C": stacked["C"],
+            "launch_count": stacked["launch_count"],
+            "us_per_step": round(stacked["us_per_step"], 1),
         },
     }
 
@@ -122,4 +134,25 @@ def compare(
             f"memory ratio drifted: {current['memory']['ratio']:.6f} vs "
             f"baseline {baseline['memory']['ratio']:.6f}"
         )
+
+    # The single-launch invariant: launch count is structural and gated
+    # exactly; us_per_step is trajectory-only (never a violation).  A
+    # baseline without the section is tolerated (pre-gate baselines), but
+    # once the baseline records it, a current run missing it means the gate
+    # silently stopped executing — that is itself a violation.
+    base_st = baseline.get("stacked")
+    cur_st = current.get("stacked")
+    if base_st and not cur_st:
+        violations.append(
+            "stacked metrics missing from the current run — the launch-count "
+            "gate did not execute (baseline still records it)"
+        )
+    elif base_st and cur_st:
+        for key in ("L", "R", "C", "launch_count"):
+            if cur_st[key] != base_st[key]:
+                violations.append(
+                    f"stacked.{key} changed: {cur_st[key]} vs baseline "
+                    f"{base_st[key]} — the fused stacked-leaf path regressed "
+                    "(single-launch 3-d grid)"
+                )
     return violations

@@ -12,7 +12,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import BENCH_CFG, emit, train_small_lm
+from benchmarks.common import (
+    BENCH_CFG,
+    emit,
+    stacked_leaf_update_stats,
+    train_small_lm,
+)
 from repro.core.optimizers import (
     QuantPolicy,
     make_optimizer,
@@ -254,6 +259,19 @@ def thm1_sgdm_convergence() -> List[Tuple[str, float, str]]:
     ]
 
 
+def stacked_fused_steptime() -> List[Tuple[str, float, str]]:
+    """Stacked-leaf fused update: an L=24 transformer-block stack must run as
+    ONE 3-d-grid Pallas launch (the ROADMAP "fuse the stacked-leaf loop"
+    item) — the row records the launch count and the SR step wall-clock."""
+    s = stacked_leaf_update_stats()
+    return [(
+        f"stacked/L{s['L']}x{s['R']}x{s['C']}-fused-SR",
+        s["us_per_step"],
+        f"pallas_launches={s['launch_count']} (single 3-d-grid launch; "
+        f"was {s['L']} per-slice launches)",
+    )]
+
+
 ALL_TABLES = [
     tab1_second_moment_ablation,
     tab2_optimizer_comparison,
@@ -262,4 +280,5 @@ ALL_TABLES = [
     tab6_moment_ablation,
     fig3_zero_point,
     thm1_sgdm_convergence,
+    stacked_fused_steptime,
 ]

@@ -11,6 +11,12 @@ Run from the repo root with ``PYTHONPATH=src`` (the CI bench-drift job does
 exactly this).  Intentional changes to the production preset regenerate the
 baseline with ``--update`` and commit the diff — the JSON diff *is* the
 review artifact for quality/memory movement.
+
+Every run also writes the freshly measured metrics to
+``benchmarks/results/BENCH_drift.json`` (uploaded as a CI artifact, so each
+PR carries its own point on the perf trajectory) and — when
+``$GITHUB_STEP_SUMMARY`` is set — renders the production4bit-vs-adamw32
+comparison table into the workflow step summary.
 """
 
 from __future__ import annotations
@@ -25,6 +31,54 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 from benchmarks import drift  # noqa: E402
 
 DEFAULT_BASELINE = os.path.join("benchmarks", "results", "baseline.json")
+BENCH_OUT = os.path.join("benchmarks", "results", "BENCH_drift.json")
+
+
+def _write_step_summary(current, baseline, violations) -> None:
+    """Render the comparison table into $GITHUB_STEP_SUMMARY (no-op locally)."""
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    q, m = current["quality"], current["memory"]
+    bq = baseline["quality"] if baseline else None
+    lines = [
+        "## bench-drift: production4bit vs adamw32",
+        "",
+        "| metric | adamw32 | production4bit | delta |",
+        "|---|---|---|---|",
+        (
+            f"| final loss ({current['meta']['steps']} steps) "
+            f"| {q['adamw32_loss']:.4f} | {q['production4bit_loss']:.4f} "
+            f"| gap {q['gap']:+.4f}"
+            + (f" (baseline {bq['gap']:+.4f})" if bq else "")
+            + " |"
+        ),
+        (
+            f"| state bytes (GPT-2-M tree, {m['n_params']:,} params) "
+            f"| {m['adamw32_state_bytes']:,} "
+            f"| {m['production4bit_state_bytes']:,} "
+            f"| ratio {m['ratio']:.4f} |"
+        ),
+    ]
+    st = current.get("stacked")
+    if st:
+        lines += [
+            "",
+            f"Stacked-leaf fused update (L={st['L']}, {st['R']}x{st['C']}): "
+            f"**{st['launch_count']} Pallas launch(es)**, "
+            f"{st['us_per_step']:.1f} us/step.",
+        ]
+    lines += [
+        "",
+        (
+            f"**DRIFT: {len(violations)} violation(s)**"
+            if violations
+            else "Status: within tolerance of the tracked baseline."
+        ),
+    ]
+    lines += [f"- {v}" for v in violations]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
 
 
 def main() -> int:
@@ -39,6 +93,16 @@ def main() -> int:
     current = drift.production_metrics(steps=args.steps)
     print("current production metrics:")
     print(json.dumps(current, indent=2))
+
+    # Per-run measurement file: the first point is committed to start the
+    # trajectory; CI rewrites it every run and uploads it as a workflow
+    # artifact.  Plain local checks leave the tracked copy alone (no
+    # perpetually dirty tree); ``--update`` refreshes it with the baseline.
+    if args.update or os.environ.get("GITHUB_ACTIONS"):
+        os.makedirs(os.path.dirname(BENCH_OUT), exist_ok=True)
+        with open(BENCH_OUT, "w") as f:
+            json.dump(current, f, indent=2, sort_keys=True)
+            f.write("\n")
 
     if args.update:
         os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
@@ -58,6 +122,7 @@ def main() -> int:
         baseline = json.load(f)
 
     violations = drift.compare(current, baseline)
+    _write_step_summary(current, baseline, violations)
     if violations:
         print("\nDRIFT DETECTED vs", args.baseline, file=sys.stderr)
         for v in violations:

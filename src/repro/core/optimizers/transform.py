@@ -558,10 +558,13 @@ class FusedAdamWRoute:
     and emits a ``Replace`` update leaf.  Eligibility mirrors the kernel's
     layout contract: 4-bit B128 m, 4-bit rank-1 v, ndim>=2 param with the
     last dim a multiple of 256 (nibble + B128 tile alignment); leading dims
-    run as stacked 2-d slices.  Stochastic-rounding configs are eligible —
-    the kernel requantizes with in-tile counter-based Threefry noise keyed by
-    the per-leaf SR key (both moments must agree on SR so one key derivation
-    covers the leaf).
+    run as stacked 2-d slices of ONE 3-d-grid launch (the outer grid dim
+    walks the slices — a deep layer stack costs a single ``pallas_call``,
+    not L of them).  Stochastic-rounding configs are eligible — the kernel
+    requantizes with in-tile counter-based Threefry noise keyed by the
+    per-leaf SR key, expanded to per-slice seed rows by one vmapped
+    ``fold_in`` in ``ops.fused_adamw4_leaf`` (both moments must agree on SR
+    so one key derivation covers the leaf).
     """
 
     lr: Schedule

@@ -21,12 +21,22 @@ TPU adaptation (vs the CUDA original):
 Tiles are (TR, TC) with TC a multiple of 256 so that packed code tiles
 (TC/2) and B128 scale tiles (TC/128) stay integral.
 
+Stacked leaves run as ONE launch: ``fused_adamw4`` takes (L, R, C) operands
+and a 3-d grid (L, R/TR, C/TC) whose outer dim walks the leading slices — no
+per-slice Python loop, no L-unrolled jaxpr, one kernel launch per leaf.  Per
+slice the v scale is ``min(row_stat, col_stat)`` with per-slice row stats
+(L, R) and column stats (C,) shared across slices (rank-1 stats are global
+per-dim vectors; leading-dim stats fold into the row stat upstream).  2-d
+operands are accepted and treated as L == 1.
+
 Stochastic rounding (``use_sr=True``) requantizes both moments with
 counter-based Threefry-2x32 noise generated *inside* the tile: the counter is
-the element's global index in the (R, C) slice, the key the per-slice SR key
-words, and the stream id separates m from v — so the noise is a pure function
-of (key, element), independent of tiling and mesh layout, and bit-identical
-to the pure-jnp SR oracle in ``ref.py`` (see ``sr.py``).
+the element's global index in its (R, C) slice, the key the slice's row of
+the (L, 2) seed input (indexed by the outer grid dim), and the stream id
+separates m from v — so the noise is a pure function of (key, element),
+independent of tiling, mesh layout, AND of whether slices launch separately
+or through the 3-d grid; it is bit-identical to the pure-jnp SR oracle in
+``ref.py`` (see ``sr.py``).
 """
 
 from __future__ import annotations
@@ -93,14 +103,17 @@ def _encode16_sr(n, table_ref, num_points: int, u):
 
 
 def _tile_uniforms(seed_ref, tile_shape, full_cols: int, stream: int):
-    """Per-element uniforms for this tile, counter = global r * C + c.
+    """Per-element uniforms for this tile, counter = slice-local r * C + c.
 
     Keyed on (per-slice seed words, element index, moment stream) — the
     in-kernel twin of ``sr.element_uniforms``, evaluated tile-locally so no
-    random tensor ever touches HBM.
+    random tensor ever touches HBM.  The counter is the element's index in
+    its own (R, C) slice (grid dims 1 and 2; the outer slice dim selects the
+    seed row instead of shifting the counter), so the bits equal what a
+    standalone per-slice launch would draw.
     """
-    i = pl.program_id(0)
-    j = pl.program_id(1)
+    i = pl.program_id(1)
+    j = pl.program_id(2)
     tr, tc = tile_shape
     rows = jax.lax.broadcasted_iota(jnp.uint32, (tr, tc), 0) + (i * tr).astype(
         jnp.uint32
@@ -166,47 +179,49 @@ def _kernel(
     bc1 = scalars_ref[0, 5]
     bc2 = scalars_ref[0, 6]
 
-    w = w_ref[...].astype(jnp.float32)
-    g = g_ref[...].astype(jnp.float32)
+    # Tensor blocks carry a leading slice dim of extent 1 (the outer grid
+    # dim selects which slice); [0] views them as the 2-d tile.
+    w = w_ref[0].astype(jnp.float32)
+    g = g_ref[0].astype(jnp.float32)
     tr, tc = w.shape
 
     # ---- decompress (Alg. 1 line 3) ----------------------------------
-    m_codes = _unpack(m_packed_ref[...])
+    m_codes = _unpack(m_packed_ref[0])
     m_vals = _decode16(m_codes, m_table_ref)
-    m_scale = m_scale_ref[...]  # (TR, TC/128)
+    m_scale = m_scale_ref[0]  # (TR, TC/128)
     m = m_vals * jnp.repeat(m_scale, _BLOCK, axis=1)
 
-    v_codes = _unpack(v_packed_ref[...])
+    v_codes = _unpack(v_packed_ref[0])
     v_vals = _decode16(v_codes, v_table_ref)
-    v_scale = _guard(jnp.minimum(vr_ref[...], vc_ref[...]))  # (TR,1)x(1,TC)
+    v_scale = _guard(jnp.minimum(vr_ref[0], vc_ref[...]))  # (TR,1)x(1,TC)
     v = v_vals * v_scale
 
     # ---- inner optimizer A: AdamW (Eq. 1) -----------------------------
     m_new = b1 * m + (1.0 - b1) * g
     v_new = b2 * v + (1.0 - b2) * g * g
     u = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + eps)
-    w_out_ref[...] = (w - lr * (u + wd * w)).astype(w_ref.dtype)
+    w_out_ref[0] = (w - lr * (u + wd * w)).astype(w_out_ref.dtype)
 
     # ---- compress (Alg. 1 line 5) -------------------------------------
     m_blocks = m_new.reshape(tr, tc // _BLOCK, _BLOCK)
     m_scale_new = _guard(jnp.max(jnp.abs(m_blocks), axis=-1))  # (TR, TC/128)
-    m_scale_out_ref[...] = m_scale_new
+    m_scale_out_ref[0] = m_scale_new
     m_n = (m_blocks / m_scale_new[..., None]).reshape(tr, tc)
     if use_sr:
         u_m = _tile_uniforms(seed_ref, (tr, tc), full_cols, STREAM_M)
         m_codes = _encode16_sr(m_n, m_table_ref, m_points, u_m)
     else:
         m_codes = _encode16(m_n, m_table_ref, m_points)
-    m_packed_out_ref[...] = _pack(m_codes)
+    m_packed_out_ref[0] = _pack(m_codes)
 
-    v_scale_new = _guard(jnp.minimum(vr_new_ref[...], vc_new_ref[...]))
+    v_scale_new = _guard(jnp.minimum(vr_new_ref[0], vc_new_ref[...]))
     v_n = v_new / v_scale_new
     if use_sr:
         u_v = _tile_uniforms(seed_ref, (tr, tc), full_cols, STREAM_V)
         v_codes = _encode16_sr(v_n, v_table_ref, v_points, u_v)
     else:
         v_codes = _encode16(v_n, v_table_ref, v_points)
-    v_packed_out_ref[...] = _pack(v_codes)
+    v_packed_out_ref[0] = _pack(v_codes)
 
 
 @functools.partial(
@@ -216,21 +231,21 @@ def _kernel(
     ),
 )
 def fused_adamw4(
-    w: jnp.ndarray,          # (R, C)
-    g: jnp.ndarray,          # (R, C)
-    m_packed: jnp.ndarray,   # (R, C/2) uint8
-    m_scale: jnp.ndarray,    # (R, C/128) f32
-    v_packed: jnp.ndarray,   # (R, C/2) uint8
-    v_r: jnp.ndarray,        # (R,) f32 — old rank-1 row stats
-    v_c: jnp.ndarray,        # (C,) f32 — old rank-1 col stats
-    v_r_new: jnp.ndarray,    # (R,) f32 — precomputed stats of updated v
+    w: jnp.ndarray,          # (L, R, C) — or (R, C), treated as L == 1
+    g: jnp.ndarray,          # like w
+    m_packed: jnp.ndarray,   # (L, R, C/2) uint8
+    m_scale: jnp.ndarray,    # (L, R, C/128) f32
+    v_packed: jnp.ndarray,   # (L, R, C/2) uint8
+    v_r: jnp.ndarray,        # (L, R) f32 — old per-slice rank-1 row stats
+    v_c: jnp.ndarray,        # (C,) f32 — old rank-1 col stats (shared)
+    v_r_new: jnp.ndarray,    # (L, R) f32 — precomputed stats of updated v
     v_c_new: jnp.ndarray,    # (C,) f32
     m_table: jnp.ndarray,    # (16,) signed (DE) table
     v_table: jnp.ndarray,    # (<=16,) unsigned (Linear) table
     lr: jnp.ndarray,
     bc1: jnp.ndarray,        # 1 - b1^t
     bc2: jnp.ndarray,        # 1 - b2^t
-    sr_seed: Optional[jnp.ndarray] = None,  # (2,) uint32 per-slice key words
+    sr_seed: Optional[jnp.ndarray] = None,  # (L, 2) uint32 per-slice key rows
     *,
     b1: float,
     b2: float,
@@ -241,7 +256,13 @@ def fused_adamw4(
     tile_c: int = TILE_C,
     use_sr: bool = False,
 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Run the fused update. Shapes must be tile-aligned (wrapper pads).
+    """Run the fused update as ONE 3-d-grid launch over all stacked slices.
+
+    The grid is (L, R/TR, C/TC); the outer dim walks the leading slices and
+    selects each slice's row-stat block and SR seed row.  Because the SR
+    counter stays slice-local, outputs are bit-identical to launching the 2-d
+    kernel once per slice.  2-d operands are accepted (L == 1, stats ``(R,)``
+    / seed ``(2,)``) and return 2-d outputs.
 
     ``use_sr=True`` requantizes stochastically with in-tile Threefry noise
     keyed by ``sr_seed`` (required in that case); ``use_sr=False`` is the
@@ -249,11 +270,15 @@ def fused_adamw4(
 
     Returns (w_new, m_packed_new, m_scale_new, v_packed_new).
     """
-    R, C = w.shape
+    squeeze = w.ndim == 2
+    if squeeze:
+        (R, C), L = w.shape, 1
+    else:
+        L, R, C = w.shape
     tr = pick_tile_r(R, tile_r)
     tc = pick_tile_c(C, tile_c)
     assert R % tr == 0 and C % tc == 0 and tc % 256 == 0, (R, C, tr, tc)
-    grid = (R // tr, C // tc)
+    grid = (L, R // tr, C // tc)
 
     # Pad tables to 16 (select tree is fixed-width); extra entries unused.
     def pad16(t):
@@ -266,9 +291,9 @@ def fused_adamw4(
     if use_sr and sr_seed is None:
         raise ValueError("fused_adamw4(use_sr=True) requires sr_seed")
     seed = (
-        jnp.zeros((1, 2), jnp.uint32)
+        jnp.zeros((L, 2), jnp.uint32)
         if sr_seed is None
-        else jnp.asarray(sr_seed, jnp.uint32).reshape(1, 2)
+        else jnp.asarray(sr_seed, jnp.uint32).reshape(L, 2)
     )
 
     scalars = jnp.stack(
@@ -284,22 +309,23 @@ def fused_adamw4(
         ]
     ).reshape(1, 8)
 
-    full = lambda shape: pl.BlockSpec(shape, lambda i, j: (0, 0))
-    row = lambda blk: pl.BlockSpec((blk, 1), lambda i, j: (i, 0))
-    col = lambda blk: pl.BlockSpec((1, blk), lambda i, j: (0, j))
-    tile = lambda c: pl.BlockSpec((tr, c), lambda i, j: (i, j))
+    full = lambda shape: pl.BlockSpec(shape, lambda l, i, j: (0, 0))
+    row = pl.BlockSpec((1, tr, 1), lambda l, i, j: (l, i, 0))
+    col = lambda blk: pl.BlockSpec((1, blk), lambda l, i, j: (0, j))
+    tile = lambda c: pl.BlockSpec((1, tr, c), lambda l, i, j: (l, i, j))
+    seed_row = pl.BlockSpec((1, 2), lambda l, i, j: (l, 0))
 
     out_shapes = (
-        jax.ShapeDtypeStruct((R, C), w.dtype),
-        jax.ShapeDtypeStruct((R, C // 2), jnp.uint8),
-        jax.ShapeDtypeStruct((R, C // _BLOCK), jnp.float32),
-        jax.ShapeDtypeStruct((R, C // 2), jnp.uint8),
+        jax.ShapeDtypeStruct((L, R, C), w.dtype),
+        jax.ShapeDtypeStruct((L, R, C // 2), jnp.uint8),
+        jax.ShapeDtypeStruct((L, R, C // _BLOCK), jnp.float32),
+        jax.ShapeDtypeStruct((L, R, C // 2), jnp.uint8),
     )
 
     kernel = functools.partial(
         _kernel, m_points=m_points, v_points=v_points, full_cols=C, use_sr=use_sr
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
@@ -308,14 +334,14 @@ def fused_adamw4(
             tile(tc // 2),            # m_packed
             tile(tc // _BLOCK),       # m_scale
             tile(tc // 2),            # v_packed
-            row(tr),                  # v_r (R,1)
+            row,                      # v_r (L,R,1)
             col(tc),                  # v_c (1,C)
-            row(tr),                  # v_r_new
+            row,                      # v_r_new
             col(tc),                  # v_c_new
             full((1, 8)),             # scalars
             full((1, 16)),            # m_table
             full((1, 16)),            # v_table
-            full((1, 2)),             # SR seed words (per-slice key)
+            seed_row,                 # SR seed rows (one (2,) key per slice)
         ],
         out_specs=[
             tile(tc),                 # w_new
@@ -326,17 +352,20 @@ def fused_adamw4(
         out_shape=out_shapes,
         interpret=interpret,
     )(
-        w,
-        g,
-        m_packed,
-        m_scale,
-        v_packed,
-        v_r.reshape(R, 1),
+        w.reshape(L, R, C),
+        g.reshape(L, R, C),
+        m_packed.reshape(L, R, C // 2),
+        m_scale.reshape(L, R, C // _BLOCK),
+        v_packed.reshape(L, R, C // 2),
+        v_r.reshape(L, R, 1),
         v_c.reshape(1, C),
-        v_r_new.reshape(R, 1),
+        v_r_new.reshape(L, R, 1),
         v_c_new.reshape(1, C),
         scalars,
         pad16(m_table),
         pad16(v_table),
         seed,
     )
+    if squeeze:
+        out = tuple(o.reshape(o.shape[1:]) for o in out)
+    return out

@@ -5,6 +5,13 @@ allclose (floats). They intentionally mirror the kernel's *structured* layout:
 2-d tensors with the last dim a multiple of 256 (so nibble pairs and B128
 blocks never straddle tiles), m quantized B128/<table> per row-major block,
 v quantized rank-1/<table> with externally supplied new scales.
+
+Every function here is vmap-safe (shape-generic jnp ops, no data-dependent
+Python): ``ops.fused_adamw4_leaf``'s ref backend vmaps
+``fused_adamw4_reference`` / ``fused_adamw4_sr_reference`` over the leading
+slice dim of stacked leaves, tracing O(1) equations regardless of depth —
+the oracle twin of the kernel's single 3-d-grid launch.  Keep new helpers
+free of per-call Python loops over array contents for the same reason.
 """
 
 from __future__ import annotations

@@ -37,6 +37,7 @@ __all__ = [
     "threefry2x32",
     "uniform_from_bits",
     "key_words",
+    "key_rows",
     "STREAM_M",
     "STREAM_V",
 ]
@@ -95,6 +96,22 @@ def key_words(key: jax.Array) -> Tuple[jnp.ndarray, jnp.ndarray]:
         data = key
     data = data.astype(jnp.uint32).reshape(-1)
     return data[-2], data[-1]
+
+
+def key_rows(keys: jax.Array) -> jnp.ndarray:
+    """(L,)-batched PRNG keys -> (L, 2) uint32 seed rows.
+
+    The batched twin of ``key_words`` (same last-two-words layout per key), in
+    the shape the 3-d-grid fused kernel consumes: row ``l`` seeds slice ``l``.
+    Accepts typed keys (e.g. from a vmapped ``fold_in``) or raw uint32
+    ``(L, 2)`` layouts.
+    """
+    if jnp.issubdtype(keys.dtype, jax.dtypes.prng_key):
+        data = jax.random.key_data(keys)
+    else:
+        data = keys
+    data = data.astype(jnp.uint32)
+    return data.reshape(data.shape[0], -1)[:, -2:]
 
 
 def element_uniforms(

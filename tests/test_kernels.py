@@ -205,6 +205,50 @@ def test_fused_adamw4_sr_kernel_matches_sr_reference(shape):
     np.testing.assert_array_equal(np.asarray(vp_k), np.asarray(vp_r))
 
 
+@pytest.mark.parametrize("use_sr", [False, True], ids=["rtn", "sr"])
+def test_fused_adamw4_3d_grid_matches_per_slice_launches(use_sr):
+    """Kernel-level single-launch contract: one (L, R, C) call with (L, R)
+    row stats and (L, 2) seed rows is bit-identical to L separate 2-d
+    launches — the outer grid dim only selects the slice's stats/seed row,
+    and the SR counter stays slice-local."""
+    L, R, C = 3, 64, 512
+    w = _rand((L, R, C), seed=81)
+    g = _rand((L, R, C), seed=82, scale=0.1)
+    m0 = _rand((L, R, C), seed=83, scale=0.01)
+    v0 = jnp.abs(_rand((L, R, C), seed=84, scale=0.001)) + 1e-10
+    m_q, v_q = quantize(m0, M_4BIT), quantize(v0, V_4BIT)
+    m_packed = m_q.codes.reshape(L, R, C // 2)
+    m_scale = m_q.scales[0].reshape(L, R, C // 128)
+    v_packed = v_q.codes.reshape(L, R, C // 2)
+    from repro.kernels.ops import _rank1_slice_stats
+    v_r, v_c = _rank1_slice_stats(v_q.scales, (L, R, C))  # (L, R), (C,)
+
+    hp = dict(b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01)
+    lr, bc1, bc2 = jnp.float32(1e-3), jnp.float32(0.1), jnp.float32(0.001)
+    v_old = jnp.stack(
+        [ref.dequant_rank1(v_packed[l], v_r[l], v_c, V_TABLE) for l in range(L)]
+    )
+    v_new = hp["b2"] * v_old + (1 - hp["b2"]) * g * g
+    v_r_new = jnp.max(v_new, axis=2)                      # (L, R)
+    v_c_new = jnp.max(v_new, axis=(0, 1))                 # (C,)
+    seeds = jnp.asarray([[3 * l + 1, 5 * l + 2] for l in range(L)], jnp.uint32)
+
+    fused = fused_adamw4(
+        w, g, m_packed, m_scale, v_packed, v_r, v_c, v_r_new, v_c_new,
+        M_TABLE, V_TABLE, lr, bc1, bc2, seeds if use_sr else None,
+        interpret=True, use_sr=use_sr, **hp,
+    )
+    for l in range(L):
+        per_slice = fused_adamw4(
+            w[l], g[l], m_packed[l], m_scale[l], v_packed[l],
+            v_r[l], v_c, v_r_new[l], v_c_new,
+            M_TABLE, V_TABLE, lr, bc1, bc2, seeds[l] if use_sr else None,
+            interpret=True, use_sr=use_sr, **hp,
+        )
+        for a, b in zip(fused, per_slice):
+            np.testing.assert_array_equal(np.asarray(a[l]), np.asarray(b))
+
+
 def test_sr_kernel_tiling_invariant():
     """The noise is keyed on global element indices, so retiling the kernel
     must not change a single code (results independent of tile shape)."""
