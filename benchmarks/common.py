@@ -41,16 +41,20 @@ DATA_CFG = DataConfig(vocab_size=512, seq_len=64, global_batch=16, seed=0)
 
 
 def train_small_lm(optimizer, steps: int = 150, cfg: ModelConfig = BENCH_CFG,
-                   seed: int = 0, sr_seed: int = None) -> Dict[str, float]:
+                   seed: int = 0, sr_seed: int = None,
+                   comms=None) -> Dict[str, float]:
     """Train the benchmark LM; returns summary metrics.
 
     ``sr_seed`` threads a stochastic-rounding PRNG key through the train
-    step (needed for SR optimizers to actually round stochastically)."""
+    step (needed for SR optimizers to actually round stochastically).
+    ``comms`` (a ``repro.comms.CommsConfig``) selects the gradient-collective
+    wire format; on this single-process harness quantized modes apply
+    exactly the transport-quantization numerics a mesh run pays."""
     params, _ = init_model(jax.random.PRNGKey(seed), cfg)
     p0 = jax.tree_util.tree_map(lambda x: np.asarray(x), params)
     key = jax.random.PRNGKey(sr_seed) if sr_seed is not None else None
     state = make_train_state(params, optimizer, key=key)
-    step_fn = jax.jit(build_train_step(cfg, optimizer))
+    step_fn = jax.jit(build_train_step(cfg, optimizer, comms=comms))
     data = SyntheticLM(DATA_CFG)
 
     losses: List[float] = []

@@ -12,8 +12,16 @@ a small deterministic JSON-able dict:
   Structural, so it must reproduce exactly anywhere.
 * stacked — the fused stacked-leaf update on an L=24 transformer-block
   stack: the Pallas launch count (structural; gated EXACTLY at its baseline
-  of 1 — the single-launch 3-d-grid invariant) and the step wall-clock
-  (recorded for the per-PR trajectory, not gated: CI machines are noisy).
+  of 1 — the single-launch 3-d-grid invariant) and the step wall-clock,
+  gated within a ±25% relative band of the baseline: wide enough for CI
+  machine noise, tight enough that a silent 2x slowdown (or the ~20%
+  regression that once landed unnoticed) fails the job instead of merging.
+* comms — the quantized-gradient-communication quality row: production4bit
+  trained with the int4 gradient-collective wire format vs the fp32
+  collective (same SR seed), plus the structural bytes-on-the-wire figures
+  for the GPT-2-M gradient tree.  The loss gap is gated like quality; the
+  wire bytes are exact and the compression ratio must stay >= 4x (the
+  acceptance floor for int4 transport).
 
 ``compare()`` checks a freshly computed dict against the tracked baseline
 (``benchmarks/results/baseline.json``) within tolerances; the CI job
@@ -31,6 +39,7 @@ import numpy as np
 
 from benchmarks.common import stacked_leaf_update_stats, train_small_lm
 from benchmarks.tables import _gpt2m_like_params
+from repro.comms import CommsConfig, wire_report
 from repro.core.optimizers import make_optimizer, state_nbytes
 
 DEFAULT_STEPS = 80
@@ -42,6 +51,10 @@ SR_SEED = 0
 LOSS_GAP_TOL = 0.08
 # memory ratio is structural; anything beyond fp rounding is a layout change
 MEMORY_RATIO_TOL = 1e-3
+# stacked us_per_step band: relative drift vs baseline before failing.
+STEP_TIME_REL_TOL = 0.25
+# int4 transport must keep at least this much compression on the wire.
+COMMS_MIN_RATIO = 4.0
 
 
 def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
@@ -70,6 +83,17 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
     b32 = state_bytes("adamw32")
     bprod = state_bytes("production4bit")
     stacked = stacked_leaf_update_stats()
+
+    # Quantized gradient communication: same production preset, same SR
+    # seed, only the gradient-collective wire format changes (fp32 -> int4
+    # block-quantized transport).  The single-process harness applies
+    # exactly the quantization numerics a mesh run pays on the wire.
+    int4 = CommsConfig(mode="int4")
+    rint4 = train_small_lm(
+        make_optimizer("production4bit", 3e-3), steps=steps, sr_seed=SR_SEED,
+        comms=int4,
+    )
+    wire = wire_report(params_s, int4)
     return {
         "meta": {"steps": steps, "sr_seed": SR_SEED, "lr": 3e-3},
         "quality": {
@@ -91,6 +115,17 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
             "launch_count": stacked["launch_count"],
             "us_per_step": round(stacked["us_per_step"], 1),
         },
+        "comms": {
+            "mode": int4.name,
+            "int4_loss": round(rint4["loss_final"], 6),
+            "gap_vs_fp32_comm": round(
+                rint4["loss_final"] - rprod["loss_final"], 6
+            ),
+            "int4_unstable": bool(rint4["unstable"]),
+            "wire_bytes": wire["total_wire_bytes"],
+            "fp32_wire_bytes": wire["total_fp32_bytes"],
+            "ratio_vs_fp32": wire["ratio_vs_fp32"],
+        },
     }
 
 
@@ -100,6 +135,7 @@ def compare(
     *,
     loss_gap_tol: float = LOSS_GAP_TOL,
     memory_ratio_tol: float = MEMORY_RATIO_TOL,
+    step_time_rel_tol: float = STEP_TIME_REL_TOL,
 ) -> List[str]:
     """Return human-readable violations of ``current`` vs ``baseline``."""
     violations = []
@@ -136,8 +172,9 @@ def compare(
         )
 
     # The single-launch invariant: launch count is structural and gated
-    # exactly; us_per_step is trajectory-only (never a violation).  A
-    # baseline without the section is tolerated (pre-gate baselines), but
+    # exactly; us_per_step is gated within a relative band (a ~20% L=24
+    # slowdown once merged silently when the figure was trajectory-only).
+    # A baseline without the section is tolerated (pre-gate baselines), but
     # once the baseline records it, a current run missing it means the gate
     # silently stopped executing — that is itself a violation.
     base_st = baseline.get("stacked")
@@ -155,4 +192,47 @@ def compare(
                     f"{base_st[key]} — the fused stacked-leaf path regressed "
                     "(single-launch 3-d grid)"
                 )
+        base_us = base_st.get("us_per_step")
+        cur_us = cur_st.get("us_per_step")
+        if base_us and cur_us:
+            rel = (cur_us - base_us) / base_us
+            if abs(rel) > step_time_rel_tol:
+                violations.append(
+                    f"stacked.us_per_step drifted {rel:+.0%}: {cur_us:.1f} vs "
+                    f"baseline {base_us:.1f} (band ±{step_time_rel_tol:.0%}) — "
+                    "regenerate the baseline with --update if intentional"
+                )
+
+    # Quantized gradient communication: the int4-transport quality gap is
+    # gated like the optimizer quality gap; wire bytes are structural
+    # (exact), and the compression ratio must hold the >= 4x floor.
+    base_cm = baseline.get("comms")
+    cur_cm = current.get("comms")
+    if base_cm and not cur_cm:
+        violations.append(
+            "comms metrics missing from the current run — the quantized "
+            "grad-comm gate did not execute (baseline still records it)"
+        )
+    elif base_cm and cur_cm:
+        if cur_cm["int4_unstable"]:
+            violations.append(
+                "production4bit + int4 grad-comm run went unstable"
+            )
+        if abs(cur_cm["gap_vs_fp32_comm"] - base_cm["gap_vs_fp32_comm"]) > loss_gap_tol:
+            violations.append(
+                "comms quality gap (int4 vs fp32 gradient collective) "
+                f"drifted: {cur_cm['gap_vs_fp32_comm']:+.4f} vs baseline "
+                f"{base_cm['gap_vs_fp32_comm']:+.4f} (tol {loss_gap_tol})"
+            )
+        for key in ("wire_bytes", "fp32_wire_bytes"):
+            if cur_cm[key] != base_cm[key]:
+                violations.append(
+                    f"comms.{key} changed: {cur_cm[key]} vs baseline "
+                    f"{base_cm[key]} — wire format drift"
+                )
+        if cur_cm["ratio_vs_fp32"] < COMMS_MIN_RATIO:
+            violations.append(
+                f"comms compression ratio {cur_cm['ratio_vs_fp32']:.2f}x fell "
+                f"below the {COMMS_MIN_RATIO:.0f}x floor for int4 transport"
+            )
     return violations

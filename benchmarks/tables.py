@@ -272,6 +272,28 @@ def stacked_fused_steptime() -> List[Tuple[str, float, str]]:
     )]
 
 
+def grad_comm_wire() -> List[Tuple[str, float, str]]:
+    """Gradient-collective bytes on the wire per train step (``repro.comms``)
+    for the GPT-2-M gradient tree — structural, computed from shapes alone.
+
+    fp32 is the baseline collective; bf16 halves it; int8/int4 move
+    block-quantized codes + fp32 absmax scales (B128), with sub-threshold
+    leaves (biases, norms) kept fp32 (App. D.1 policy)."""
+    from repro.comms import mode_totals
+
+    params_s = _gpt2m_like_params()
+    rows = []
+    for r in mode_totals(params_s):
+        rows.append((
+            f"comms/{r['mode']}",
+            0.0,
+            f"wire_bytes={r['total_wire_bytes']} "
+            f"ratio_vs_fp32={r['ratio_vs_fp32']:.2f} "
+            f"quantized_leaves={r['quantized_leaves']}/{r['n_leaves']}",
+        ))
+    return rows
+
+
 ALL_TABLES = [
     tab1_second_moment_ablation,
     tab2_optimizer_comparison,
@@ -281,4 +303,5 @@ ALL_TABLES = [
     fig3_zero_point,
     thm1_sgdm_convergence,
     stacked_fused_steptime,
+    grad_comm_wire,
 ]

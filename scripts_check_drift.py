@@ -66,7 +66,17 @@ def _write_step_summary(current, baseline, violations) -> None:
             "",
             f"Stacked-leaf fused update (L={st['L']}, {st['R']}x{st['C']}): "
             f"**{st['launch_count']} Pallas launch(es)**, "
-            f"{st['us_per_step']:.1f} us/step.",
+            f"{st['us_per_step']:.1f} us/step (gated ±25% vs baseline).",
+        ]
+    cm = current.get("comms")
+    if cm:
+        lines += [
+            "",
+            f"Quantized grad-comm ({cm['mode']}): loss "
+            f"{cm['int4_loss']:.4f}, gap vs fp32 collective "
+            f"{cm['gap_vs_fp32_comm']:+.4f}; wire "
+            f"{cm['wire_bytes']:,} B vs fp32 {cm['fp32_wire_bytes']:,} B "
+            f"(**{cm['ratio_vs_fp32']:.2f}x fewer**, GPT-2-M tree).",
         ]
     lines += [
         "",

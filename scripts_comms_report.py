@@ -1,0 +1,65 @@
+#!/usr/bin/env python
+"""Bytes-on-the-wire report for the quantized gradient collective.
+
+Renders the per-mode collective-traffic table (``repro.comms.accounting``)
+for the GPT-2-M gradient tree — structural, computed from shapes alone, so
+the figures are exact and identical on every platform:
+
+    PYTHONPATH=src python scripts_comms_report.py
+
+Prints ``name,us_per_call,derived`` CSV rows (the benchmark-suite idiom) and,
+when ``$GITHUB_STEP_SUMMARY`` is set (the CI comms-matrix job), appends the
+markdown table to the workflow step summary.  Exits nonzero if int4 transport
+falls below the 4x compression floor — the same acceptance gate the drift
+check enforces.
+"""
+
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from benchmarks.tables import _gpt2m_like_params  # noqa: E402
+from repro.comms import format_wire_table, mode_totals  # noqa: E402
+
+INT4_MIN_RATIO = 4.0
+
+
+def main() -> int:
+    params_s = _gpt2m_like_params()
+    reports = mode_totals(params_s)
+
+    for r in reports:
+        print(
+            f"comms/{r['mode']},0.0,"
+            f"wire_bytes={r['total_wire_bytes']} "
+            f"ratio_vs_fp32={r['ratio_vs_fp32']:.2f} "
+            f"quantized_leaves={r['quantized_leaves']}/{r['n_leaves']}"
+        )
+
+    table = format_wire_table(
+        reports, title="Gradient-collective bytes per step (GPT-2-M tree)"
+    )
+    summary = os.environ.get("GITHUB_STEP_SUMMARY")
+    if summary:
+        with open(summary, "a") as f:
+            f.write(table + "\n")
+    else:
+        print()
+        print(table)
+
+    int4 = next(r for r in reports if r["mode"] == "int4")
+    if int4["ratio_vs_fp32"] < INT4_MIN_RATIO:
+        print(
+            f"FAIL: int4 transport ratio {int4['ratio_vs_fp32']:.2f}x is "
+            f"below the {INT4_MIN_RATIO:.0f}x floor",
+            file=sys.stderr,
+        )
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,31 @@
+"""Quantized gradient communication: the layer between the train step and
+the mesh.
+
+``CommsConfig`` is the one gradient-compression knob (``--grad-comm
+{fp32,bf16,int8,int4}``); ``reduce_grads`` applies the configured wire
+format to the gradient tree inside the train step; ``quantized_all_reduce``
+is the shard_map-level dequantize-and-sum primitive; ``accounting`` owns
+bytes-on-the-wire reporting.  See docs/comms.md.
+"""
+
+from repro.comms.accounting import (
+    format_wire_table,
+    leaf_wire_bytes,
+    mode_totals,
+    wire_report,
+)
+from repro.comms.config import GRAD_COMM_MODES, CommsConfig, from_grad_dtype
+from repro.comms.reduce import grad_comm_key, quantized_all_reduce, reduce_grads
+
+__all__ = [
+    "GRAD_COMM_MODES",
+    "CommsConfig",
+    "from_grad_dtype",
+    "grad_comm_key",
+    "quantized_all_reduce",
+    "reduce_grads",
+    "leaf_wire_bytes",
+    "wire_report",
+    "mode_totals",
+    "format_wire_table",
+]

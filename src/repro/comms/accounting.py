@@ -1,0 +1,114 @@
+"""Bytes-on-the-wire accounting for the gradient collective.
+
+Everything here is structural — computed from leaf shapes alone (arrays and
+``ShapeDtypeStruct`` trees both work, no allocation) — so the numbers are
+exact, platform-independent, and cheap enough to gate in CI: per-step
+collective bytes per leaf and in total, fp32 baseline vs the configured
+wire format.  Surfaced in ``benchmarks/tables.py`` (``comms/*`` rows), the
+drift gate (``benchmarks/drift.py``) and the CI step summary
+(``scripts_comms_report.py``).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import jax
+
+from repro.comms.config import GRAD_COMM_MODES, CommsConfig
+from repro.core.optimizers.base import tree_paths
+from repro.core.quantizer import quantized_nbytes
+
+__all__ = [
+    "leaf_wire_bytes",
+    "wire_report",
+    "mode_totals",
+    "format_wire_table",
+]
+
+
+def _numel(shape: Tuple[int, ...]) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return n
+
+
+def leaf_wire_bytes(shape: Tuple[int, ...], config: CommsConfig) -> Tuple[int, int]:
+    """``(fp32_bytes, wire_bytes)`` for one gradient leaf per reduction.
+
+    Quantized modes move codes + fp32 block scales; leaves at or under the
+    threshold (and all leaves in fp32/bf16 modes) move as raw casts.
+    """
+    n = _numel(shape)
+    fp32 = n * 4
+    qcfg = config.quant_config()
+    if qcfg is not None and n > config.threshold:
+        return fp32, quantized_nbytes(shape, qcfg)
+    if config.cast_dtype is not None:
+        return fp32, n * 2
+    return fp32, fp32
+
+
+def wire_report(grads_tree, config: CommsConfig) -> Dict:
+    """Per-leaf and total gradient-collective bytes for one train step.
+
+    ``grads_tree`` is any tree of array-likes with ``.shape`` (the gradient
+    tree has the parameter tree's shapes, so passing params — concrete or
+    abstract — is the common call).
+    """
+    leaves = jax.tree_util.tree_leaves(grads_tree)
+    paths = jax.tree_util.tree_leaves(tree_paths(grads_tree))
+    rows: List[Dict] = []
+    total_fp32 = total_wire = 0
+    quantized_leaves = 0
+    qcfg = config.quant_config()
+    for path, leaf in zip(paths, leaves):
+        shape = tuple(leaf.shape)
+        fp32, wire = leaf_wire_bytes(shape, config)
+        quantized = qcfg is not None and _numel(shape) > config.threshold
+        quantized_leaves += int(quantized)
+        rows.append(
+            {
+                "path": path,
+                "shape": shape,
+                "fp32_bytes": fp32,
+                "wire_bytes": wire,
+                "quantized": quantized,
+            }
+        )
+        total_fp32 += fp32
+        total_wire += wire
+    return {
+        "mode": config.mode,
+        "name": config.name,
+        "leaves": rows,
+        "n_leaves": len(rows),
+        "quantized_leaves": quantized_leaves,
+        "total_fp32_bytes": int(total_fp32),
+        "total_wire_bytes": int(total_wire),
+        "ratio_vs_fp32": round(total_fp32 / total_wire, 4) if total_wire else 1.0,
+    }
+
+
+def mode_totals(grads_tree, modes=GRAD_COMM_MODES) -> List[Dict]:
+    """One ``wire_report`` summary per mode (the trade-off table's spine)."""
+    return [wire_report(grads_tree, CommsConfig(mode=m)) for m in modes]
+
+
+def format_wire_table(reports: List[Dict], title: str = "") -> str:
+    """Markdown bytes-on-the-wire table (CI step summary / docs)."""
+    lines = []
+    if title:
+        lines += [f"### {title}", ""]
+    lines += [
+        "| grad-comm | wire format | collective bytes/step | vs fp32 | quantized leaves |",
+        "|---|---|---|---|---|",
+    ]
+    for r in reports:
+        lines.append(
+            f"| {r['mode']} | {r['name']} | {r['total_wire_bytes']:,} "
+            f"| {r['ratio_vs_fp32']:.2f}x fewer "
+            f"| {r['quantized_leaves']}/{r['n_leaves']} |"
+        )
+    return "\n".join(lines)

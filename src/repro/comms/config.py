@@ -1,0 +1,118 @@
+"""CommsConfig: the one gradient-compression knob (``--grad-comm``).
+
+Four wire formats for the cross-device gradient reduction:
+
+* ``fp32`` — today's baseline: fp32 gradients move through the collective.
+* ``bf16`` — cast-before-transport (the legacy ``grad_dtype=bf16`` lever,
+  folded in here; half the collective bytes).
+* ``int8`` — block-wise quantized transport: uint8 codes + one fp32 absmax
+  scale per ``block_size`` elements (~3.9x fewer bytes at B128).
+* ``int4`` — nibble-packed codes + block scales (~7.5x fewer bytes at B128).
+
+Quantized modes reuse the 4-bit-optimizer stack end to end: the signed
+mappings/normalizers from ``core/quantizer.py`` and — when the train state
+carries an SR base key — stochastic rounding keyed off the checkpointed
+``fold_in(TrainState.key, step)`` stream, so the transport noise is a pure
+function of checkpointed state (bit-reproducible across resume and across
+elastic mesh restarts).  Leaves with at most ``threshold`` elements
+(biases, norm scales) always move fp32, mirroring the optimizer-state
+policy (paper App. D.1).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.quantizer import QuantConfig
+
+__all__ = ["GRAD_COMM_MODES", "CommsConfig", "from_grad_dtype"]
+
+GRAD_COMM_MODES = ("fp32", "bf16", "int8", "int4")
+
+# Domain tag folded into the per-step SR key before per-leaf folds, so the
+# gradient-transport noise stream never collides with the optimizer-state
+# SR stream (which folds small leaf indices into the same step key).
+GRAD_COMM_KEY_DOMAIN = 0x67726164  # ASCII "grad"
+
+
+@dataclasses.dataclass(frozen=True)
+class CommsConfig:
+    """Static description of the gradient-collective wire format (hashable)."""
+
+    mode: str = "fp32"
+    block_size: int = 128
+    mapping: str = "de"  # signed map WITH a zero code (gradients are sparse-ish)
+    stochastic_rounding: bool = True
+    threshold: int = 4096  # leaves <= threshold elements move fp32 (App. D.1)
+
+    def __post_init__(self):
+        if self.mode not in GRAD_COMM_MODES:
+            raise ValueError(
+                f"unknown grad-comm mode {self.mode!r}; want one of {GRAD_COMM_MODES}"
+            )
+
+    @classmethod
+    def parse(cls, mode: str, **overrides) -> "CommsConfig":
+        """Build from the CLI spelling (``--grad-comm int4``)."""
+        return cls(mode=str(mode).lower(), **overrides)
+
+    # -- wire-format properties ------------------------------------------
+    @property
+    def bits(self) -> Optional[int]:
+        return {"int8": 8, "int4": 4}.get(self.mode)
+
+    @property
+    def quantized(self) -> bool:
+        return self.mode in ("int8", "int4")
+
+    @property
+    def compresses(self) -> bool:
+        """Any mode that changes what moves through the collective."""
+        return self.mode != "fp32"
+
+    @property
+    def cast_dtype(self):
+        return jnp.bfloat16 if self.mode == "bf16" else None
+
+    def quant_config(self) -> Optional[QuantConfig]:
+        """The ``core/quantizer`` config of the transport quantizer."""
+        if not self.quantized:
+            return None
+        return QuantConfig(
+            bits=self.bits,
+            normalization="blockwise",
+            block_size=self.block_size,
+            mapping=self.mapping,
+            signed=True,
+            stochastic_rounding=self.stochastic_rounding,
+            threshold=self.threshold,
+        )
+
+    @property
+    def name(self) -> str:
+        if not self.quantized:
+            return self.mode
+        sr = "+SR" if self.stochastic_rounding else ""
+        return f"{self.mode}/B{self.block_size}/{self.mapping.upper()}{sr}"
+
+
+def from_grad_dtype(grad_dtype) -> CommsConfig:
+    """Migrate the legacy ``grad_dtype`` argument to a ``CommsConfig``.
+
+    ``None``/fp32 -> the fp32 baseline; bf16 -> the ``bf16`` mode.  Anything
+    else was never a supported wire format and is rejected.
+    """
+    if grad_dtype is None:
+        return CommsConfig()
+    dt = jnp.dtype(grad_dtype)
+    if dt == jnp.dtype(jnp.bfloat16):
+        return CommsConfig(mode="bf16")
+    if dt == jnp.dtype(jnp.float32):
+        return CommsConfig()
+    raise ValueError(
+        f"grad_dtype={grad_dtype!r} has no CommsConfig equivalent; "
+        f"use CommsConfig(mode=...) with one of {GRAD_COMM_MODES}"
+    )

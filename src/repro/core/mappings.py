@@ -31,6 +31,7 @@ __all__ = [
     "encode",
     "decode",
     "encode_stochastic",
+    "encode_stochastic_uniform",
     "MAPPINGS",
 ]
 
@@ -133,6 +134,20 @@ def encode_stochastic(
 ) -> jnp.ndarray:
     """Stochastic rounding (App. E.3): round to the bracketing codes with
     probability proportional to proximity; values outside the table clamp."""
+    return encode_stochastic_uniform(n, table, jax.random.uniform(key, n.shape))
+
+
+def encode_stochastic_uniform(
+    n: jnp.ndarray, table: jnp.ndarray, u: jnp.ndarray
+) -> jnp.ndarray:
+    """``encode_stochastic`` consuming precomputed uniforms ``u`` in [0, 1).
+
+    Callers that need mesh-invariant noise (gradient transport in
+    ``repro.comms``) derive ``u`` with the counter-based Threefry of
+    ``repro.kernels.sr`` instead of ``jax.random.uniform``, whose draws
+    depend on the output sharding under the default non-partitionable
+    lowering.
+    """
     k = table.shape[0]
     # Lower bracket: largest code with T(code) <= n (clamped to [0, K-2]).
     lo = jnp.clip(jnp.sum(n[..., None] >= table, axis=-1) - 1, 0, k - 2)
@@ -140,6 +155,5 @@ def encode_stochastic(
     t_hi = jnp.take(table, lo + 1, axis=0)
     span = jnp.maximum(t_hi - t_lo, 1e-12)
     p_hi = jnp.clip((n - t_lo) / span, 0.0, 1.0)
-    u = jax.random.uniform(key, n.shape)
     idx = lo + (u < p_hi).astype(lo.dtype)
     return idx.astype(jnp.uint8)

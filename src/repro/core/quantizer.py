@@ -24,7 +24,13 @@ import jax.numpy as jnp
 
 from repro.core import mappings, normalization, packing
 
-__all__ = ["QuantConfig", "QuantizedTensor", "quantize", "dequantize"]
+__all__ = [
+    "QuantConfig",
+    "QuantizedTensor",
+    "quantize",
+    "dequantize",
+    "quantized_nbytes",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -140,13 +146,25 @@ def _denorm_scale(
 
 
 def quantize(
-    x: jnp.ndarray, config: QuantConfig, key: Optional[jax.Array] = None
+    x: jnp.ndarray,
+    config: QuantConfig,
+    key: Optional[jax.Array] = None,
+    *,
+    uniforms: Optional[jnp.ndarray] = None,
 ) -> QuantizedTensor:
-    """Compress a tensor. ``key`` is required iff stochastic_rounding."""
+    """Compress a tensor. ``key`` is required iff stochastic_rounding.
+
+    ``uniforms`` (same shape as ``x``, values in [0, 1)) overrides the
+    ``jax.random`` draw for stochastic rounding — callers that must be
+    bit-reproducible across mesh layouts (``repro.comms``) pass
+    counter-based Threefry uniforms here.
+    """
     x = x.astype(jnp.float32)
     n, scales = _normalize(x, config)
     table = config.table()
-    if config.stochastic_rounding and key is not None:
+    if config.stochastic_rounding and uniforms is not None:
+        codes = mappings.encode_stochastic_uniform(n, table, uniforms)
+    elif config.stochastic_rounding and key is not None:
         codes = mappings.encode_stochastic(n, table, key)
     else:
         # Round-to-nearest; also the fallback when an SR config is used
@@ -167,6 +185,35 @@ def dequantize(q: QuantizedTensor) -> jnp.ndarray:
     vals = mappings.decode(codes, config.table())
     scale = _denorm_scale(q.scales, q.shape, config)
     return vals * scale
+
+
+def quantized_nbytes(shape: Tuple[int, ...], config: QuantConfig) -> int:
+    """Bytes of the compressed form of a ``shape`` tensor under ``config``,
+    from shapes alone (no allocation) — codes plus fp32 scales.  This is the
+    storage cost of ``quantize(x, config)`` and equally the wire cost of
+    moving the compressed payload through a collective (``repro.comms``)."""
+    from repro.core import normalization, packing
+
+    shape = tuple(int(d) for d in shape)
+    n = 1
+    for d in shape:
+        n *= d
+    if n == 0:
+        return 0
+    if config.bits == 4:
+        last = shape[-1] if shape else 1
+        codes = (n // last) * packing.packed_last_dim(last)
+    else:
+        codes = n  # one uint8 code per element
+    if config.normalization == "pertensor":
+        scales = 1
+    elif config.normalization == "blockwise":
+        scales = normalization.blockwise_num_blocks(n, config.block_size)
+    elif config.normalization == "rank1":
+        scales = sum(shape) if len(shape) >= 2 else 1
+    else:
+        raise ValueError(f"unknown normalization {config.normalization!r}")
+    return int(codes + scales * 4)
 
 
 def state_bytes(x: Any) -> int:

@@ -38,13 +38,18 @@ __all__ = [
     "uniform_from_bits",
     "key_words",
     "key_rows",
+    "tensor_uniforms",
     "STREAM_M",
     "STREAM_V",
+    "STREAM_GRAD",
 ]
 
 # Stream ids separating the two moments' noise within one (key, element) pair.
 STREAM_M = 0
 STREAM_V = 1
+# Gradient-transport quantization (repro.comms) — its own counter stream so
+# the wire noise never collides with either moment's even under a shared key.
+STREAM_GRAD = 2
 
 _PARITY = np.uint32(0x1BD11BDA)  # Threefry key-schedule parity constant
 _ROT = (13, 15, 26, 6, 17, 29, 16, 24)
@@ -124,5 +129,26 @@ def element_uniforms(
     """
     R, C = shape
     linear = jnp.arange(R * C, dtype=jnp.uint32).reshape(R, C)
+    bits, _ = threefry2x32(k0, k1, linear, jnp.uint32(stream))
+    return uniform_from_bits(bits)
+
+
+def tensor_uniforms(key: jax.Array, shape: Tuple[int, ...], stream: int) -> jnp.ndarray:
+    """Per-element uniforms for an arbitrary-rank tensor, counter = the
+    flattened global element index.
+
+    The any-ndim sibling of ``element_uniforms`` taking a PRNG key directly.
+    Unlike ``jax.random.uniform`` under the default (non-partitionable)
+    Threefry lowering — whose draws depend on how the output is sharded —
+    the counter-based derivation yields the same bits for the same
+    (key, element) on every mesh layout, which is what lets quantized
+    gradient transport (``repro.comms``) promise bit-identical results
+    across elastic mesh restarts.
+    """
+    k0, k1 = key_words(key)
+    n = 1
+    for d in shape:
+        n *= int(d)
+    linear = jnp.arange(n, dtype=jnp.uint32).reshape(shape)
     bits, _ = threefry2x32(k0, k1, linear, jnp.uint32(stream))
     return uniform_from_bits(bits)

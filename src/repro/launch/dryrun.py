@@ -106,10 +106,17 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, opt_name: str = "adam
         state_s = jax.eval_shape(
             lambda: make_train_state_from_shapes(params_s, opt, key=sr_key)
         )
-        import jax.numpy as _jnp
-        grad_dtype = _jnp.bfloat16 if os.environ.get("REPRO_GRAD_BF16") else None
+        from repro.comms import CommsConfig
+        # REPRO_GRAD_COMM selects the gradient-collective wire format
+        # (fp32/bf16/int8/int4); REPRO_GRAD_BF16 is the legacy spelling of
+        # bf16 and still honoured.
+        comm_mode = os.environ.get(
+            "REPRO_GRAD_COMM",
+            "bf16" if os.environ.get("REPRO_GRAD_BF16") else "fp32",
+        )
         step_fn = build_train_step(cfg, opt, mesh, axes, zero=True,
-                                   accum_steps=accum_steps, grad_dtype=grad_dtype)
+                                   accum_steps=accum_steps,
+                                   comms=CommsConfig.parse(comm_mode))
         state_sh = train_state_shardings(state_s, axes, mesh, zero=True)
         batch_sh = batch_shardings(specs, mesh)
         with mesh:

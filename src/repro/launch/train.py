@@ -10,6 +10,13 @@ Production-path flags:
   --optimizer production4bit   fp32 embeddings/norms + 4-bit SR body
   --sr-seed N                  thread a stochastic-rounding PRNG key through
                                the train step (unbiased quantization, Alg. 1)
+  --grad-comm MODE             gradient-collective wire format
+                               (fp32|bf16|int8|int4): int8/int4 move
+                               block-quantized codes+scales through the
+                               cross-device reduction instead of fp32, with
+                               SR keyed off the --sr-seed stream (unbiased
+                               transport, bit-reproducible across resume);
+                               replaces the removed grad_dtype plumbing
   --mesh DxM                   run on a (data=D, model=M) host-device mesh via
                                jit_train_step with explicit shardings
   --ckpt-dir PATH              resume is elastic: the restore target is built
@@ -32,6 +39,7 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro.comms import GRAD_COMM_MODES, CommsConfig, wire_report
 from repro.configs import ARCHS, get_config, reduced_config
 from repro.core.optimizers import (
     linear_warmup_linear_decay,
@@ -117,6 +125,11 @@ def main():
                     help="seed for the stochastic-rounding PRNG key stream "
                          "(required for unbiased SR; omit for deterministic "
                          "round-to-nearest)")
+    ap.add_argument("--grad-comm", default="fp32",
+                    choices=list(GRAD_COMM_MODES),
+                    help="gradient-collective wire format; int8/int4 "
+                         "block-quantize the cross-device reduction "
+                         "(docs/comms.md)")
     ap.add_argument("--mesh", default=None, metavar="DxM",
                     help="host-device mesh, e.g. 2x4 (data=2, model=4); "
                          "needs D*M local devices")
@@ -184,20 +197,33 @@ def main():
     print(f"arch={cfg.name} optimizer={opt.name} "
           f"state_bytes={state_nbytes(state.opt_state):,}")
 
+    comms = CommsConfig.parse(args.grad_comm)
+    rep = wire_report(state.params, comms)
+    print(f"grad-comm={comms.name} collective_bytes/step="
+          f"{rep['total_wire_bytes']:,} "
+          f"({rep['ratio_vs_fp32']:.2f}x fewer than fp32, "
+          f"{rep['quantized_leaves']}/{rep['n_leaves']} leaves quantized)")
+
     if sr_key is None and _uses_stochastic_rounding(state.opt_state):
         print("warning: optimizer is configured for stochastic rounding but "
               "no --sr-seed was given — quantization falls back to biased "
               "round-to-nearest")
+    if sr_key is None and comms.quantized and comms.stochastic_rounding:
+        print("warning: --grad-comm " + comms.mode + " transports gradients "
+              "with stochastic rounding but no --sr-seed was given — "
+              "transport falls back to biased round-to-nearest")
 
     data = SyntheticLM(DataConfig(cfg.vocab_size, args.seq, args.batch))
     if mesh is not None:
         sample = {k: jnp.asarray(v) for k, v in data.batch_at(start).items()}
         step_fn = jit_train_step(
-            build_train_step(cfg, opt, mesh, axes, zero=True),
+            build_train_step(cfg, opt, mesh, axes, zero=True, comms=comms),
             state, sample, axes, mesh,
         )
     else:
-        step_fn = jax.jit(build_train_step(cfg, opt), donate_argnums=(0,))
+        step_fn = jax.jit(
+            build_train_step(cfg, opt, comms=comms), donate_argnums=(0,)
+        )
 
     for t in range(start, args.steps):
         batch = {k: jnp.asarray(v) for k, v in data.batch_at(t).items()}

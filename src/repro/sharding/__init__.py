@@ -1,6 +1,13 @@
 """Sharding: logical-axis rules engine + state/batch/cache sharding trees."""
 
-from repro.sharding.rules import TP_RULES, dp_axes, sharding_for, spec_for, with_zero
+from repro.sharding.rules import (
+    TP_RULES,
+    dp_axes,
+    sharding_for,
+    spec_for,
+    wire_spec,
+    with_zero,
+)
 from repro.sharding.specs import (
     batch_shardings,
     cache_shardings,
@@ -13,6 +20,7 @@ __all__ = [
     "TP_RULES",
     "spec_for",
     "with_zero",
+    "wire_spec",
     "sharding_for",
     "dp_axes",
     "param_shardings",

@@ -24,6 +24,7 @@ __all__ = [
     "spec_for",
     "sharding_for",
     "with_zero",
+    "wire_spec",
     "mesh_axis_sizes",
 ]
 
@@ -100,6 +101,16 @@ def with_zero(shape: Tuple[int, ...], spec: P, mesh: Mesh, axes=None) -> P:
             entries[d] = dps if len(dps) > 1 else dps[0]
             return P(*entries)
     return P(*entries)
+
+
+def wire_spec(shape: Tuple[int, ...], axes: Tuple[str, ...], mesh: Mesh) -> P:
+    """ZeRO wire layout for a gradient-shaped tensor moving through the
+    collective.  Also used by ``repro.comms`` for quantized transport: packed
+    int4 codes keep the parameter's ndim (nibble packing halves only the last
+    dim), so the same logical axes resolve their layout — the divisibility
+    fallbacks in ``spec_for``/``with_zero`` absorb the halved dim exactly the
+    way they absorb awkward arch geometries."""
+    return with_zero(shape, spec_for(shape, axes, mesh), mesh, axes=axes)
 
 
 def sharding_for(

@@ -15,12 +15,14 @@ Distribution model (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.sharding import Mesh
 
+from repro.comms import CommsConfig, from_grad_dtype, grad_comm_key, reduce_grads
 from repro.core.optimizers.base import Optimizer
 from repro.core.optimizers.transform import GradientTransformation, as_optimizer
 from repro.models import ModelConfig, loss_fn
@@ -30,11 +32,8 @@ from repro.sharding import (
     param_shardings,
     replicated,
 )
-from repro.sharding.rules import spec_for, with_zero
 
 __all__ = ["TrainState", "build_train_step", "make_train_state", "train_state_shardings"]
-
-_IS_AXES_LEAF = lambda a: isinstance(a, tuple) and all(isinstance(s, str) for s in a)
 
 
 @jax.tree_util.register_pytree_with_keys_class
@@ -94,23 +93,6 @@ def train_state_shardings(state, axes, mesh: Mesh, zero: bool = True):
     )
 
 
-def _constrain_grads_zero(grads, params, axes, mesh: Mesh, grad_dtype=None):
-    """Force gradients into the ZeRO layout (reduce-scatter over dp).
-
-    ``grad_dtype=bf16`` is gradient compression: the cross-device reduction
-    moves bf16 instead of fp32 — half the gradient collective bytes (a
-    beyond-paper distributed-optimization lever, recorded in §Perf)."""
-    a_leaves = jax.tree_util.tree_leaves(axes, is_leaf=_IS_AXES_LEAF)
-    g_leaves, treedef = jax.tree_util.tree_flatten(grads)
-    out = []
-    for g, a in zip(g_leaves, a_leaves):
-        if grad_dtype is not None:
-            g = g.astype(grad_dtype)
-        spec = with_zero(tuple(g.shape), spec_for(tuple(g.shape), a, mesh), mesh, axes=a)
-        out.append(jax.lax.with_sharding_constraint(g, NamedSharding(mesh, spec)))
-    return jax.tree_util.tree_unflatten(treedef, out)
-
-
 def build_train_step(
     cfg: ModelConfig,
     optimizer,  # Optimizer facade or a bare GradientTransformation chain
@@ -119,6 +101,7 @@ def build_train_step(
     *,
     zero: bool = True,
     accum_steps: int = 1,
+    comms: Optional[CommsConfig] = None,
     grad_dtype=None,
 ) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
@@ -128,8 +111,28 @@ def build_train_step(
     memory drops by the accumulation factor).  The microbatch loop itself is
     deterministic (the loss consumes no randomness); stochastic rounding
     happens once, at the post-accumulation optimizer update, keyed by
-    ``fold_in(state.key, state.step)`` when ``state.key`` is set."""
+    ``fold_in(state.key, state.step)`` when ``state.key`` is set.
+
+    ``comms`` selects the gradient-collective wire format (``repro.comms``):
+    fp32 (default), bf16 cast, or int8/int4 block-quantized transport with
+    SR keyed off the same checkpointed key stream.  ``grad_dtype`` is the
+    deprecated spelling of ``CommsConfig(mode="bf16")``.
+    """
     optimizer = _coerce_optimizer(optimizer)
+    if grad_dtype is not None:
+        if comms is not None:
+            raise ValueError(
+                "pass either comms=CommsConfig(...) or the deprecated "
+                "grad_dtype, not both"
+            )
+        warnings.warn(
+            "grad_dtype is deprecated; use comms=CommsConfig(mode='bf16') "
+            "(the --grad-comm knob) — see docs/comms.md",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        comms = from_grad_dtype(grad_dtype)
+    comms = comms if comms is not None else CommsConfig()
 
     def compute_grads(params, batch):
         (loss, metrics), grads = jax.value_and_grad(
@@ -186,8 +189,21 @@ def build_train_step(
         else:
             loss, metrics, grads = compute_grads(params, batch)
 
-        if mesh is not None and zero and axes is not None:
-            grads = _constrain_grads_zero(grads, params, axes, mesh, grad_dtype)
+        # Gradient collective: constrain to the ZeRO wire layout and apply
+        # the configured compression (repro.comms).  Quantized modes derive
+        # their transport SR key from the checkpointed (base key, step) pair,
+        # domain-separated from the optimizer-state SR stream.
+        comms_mesh = mesh if (mesh is not None and zero and axes is not None) else None
+        if comms_mesh is not None or comms.compresses:
+            ck = (
+                grad_comm_key(state.key, state.step)
+                if comms.quantized and comms.stochastic_rounding
+                else None
+            )
+            grads = reduce_grads(
+                grads, axes if comms_mesh is not None else None,
+                comms_mesh, comms, key=ck,
+            )
 
         if state.key is not None:
             # Per-step SR key: a pure function of (base key, step) so a
