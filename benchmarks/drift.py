@@ -22,6 +22,12 @@ a small deterministic JSON-able dict:
   for the GPT-2-M gradient tree.  The loss gap is gated like quality; the
   wire bytes are exact and the compression ratio must stay >= 4x (the
   acceptance floor for int4 transport).
+* serving — the throughput engine vs the legacy per-token host-sync loop
+  on the same workload (``benchmarks/serving.py``), plus the structural
+  bf16/q4 weight-byte figures for the GPT-2-M tree.  Absolute tok/s/slot
+  is recorded for the trajectory only (CI machines vary); the engine/legacy
+  speedup must hold the >= 3x floor and the q4 weight-compression ratio
+  the >= 3.5x floor.  Weight bytes are exact.
 
 ``compare()`` checks a freshly computed dict against the tracked baseline
 (``benchmarks/results/baseline.json``) within tolerances; the CI job
@@ -55,6 +61,11 @@ MEMORY_RATIO_TOL = 1e-3
 STEP_TIME_REL_TOL = 0.25
 # int4 transport must keep at least this much compression on the wire.
 COMMS_MIN_RATIO = 4.0
+# chunked-decode engine must stay at least this much faster than the legacy
+# per-token host-sync loop (measured ~12x on CPU; 3x is the acceptance floor).
+SERVING_MIN_SPEEDUP = 3.0
+# q4 serving weights must keep at least this much compression vs bf16.
+SERVING_MIN_Q4_RATIO = 3.5
 
 
 def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
@@ -94,6 +105,12 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
         comms=int4,
     )
     wire = wire_report(params_s, int4)
+
+    # Serving: chunked-decode engine vs the legacy host-sync loop, plus the
+    # structural bf16/q4 weight bytes on the same GPT-2-M tree.
+    from benchmarks.serving import serving_stats
+
+    serving = serving_stats()
     return {
         "meta": {"steps": steps, "sr_seed": SR_SEED, "lr": 3e-3},
         "quality": {
@@ -126,6 +143,7 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
             "fp32_wire_bytes": wire["total_fp32_bytes"],
             "ratio_vs_fp32": wire["ratio_vs_fp32"],
         },
+        "serving": serving,
     }
 
 
@@ -234,5 +252,35 @@ def compare(
             violations.append(
                 f"comms compression ratio {cur_cm['ratio_vs_fp32']:.2f}x fell "
                 f"below the {COMMS_MIN_RATIO:.0f}x floor for int4 transport"
+            )
+
+    # Serving: absolute tok/s/slot is trajectory-only (machine-dependent);
+    # the engine/legacy speedup and the q4 weight ratio are floored, and the
+    # structural weight bytes are exact.
+    base_sv = baseline.get("serving")
+    cur_sv = current.get("serving")
+    if base_sv and not cur_sv:
+        violations.append(
+            "serving metrics missing from the current run — the serving "
+            "throughput gate did not execute (baseline still records it)"
+        )
+    elif base_sv and cur_sv:
+        if cur_sv["speedup_vs_host_sync_loop"] < SERVING_MIN_SPEEDUP:
+            violations.append(
+                "serving engine speedup over the per-token host-sync loop "
+                f"fell to {cur_sv['speedup_vs_host_sync_loop']:.2f}x, below "
+                f"the {SERVING_MIN_SPEEDUP:.0f}x floor — chunked decode "
+                "regressed (extra syncs or lost scan fusion)"
+            )
+        for key in ("bf16_weight_bytes", "q4_weight_bytes"):
+            if cur_sv[key] != base_sv[key]:
+                violations.append(
+                    f"serving.{key} changed: {cur_sv[key]} vs baseline "
+                    f"{base_sv[key]} — serving weight-format drift"
+                )
+        if cur_sv["q4_ratio_vs_bf16"] < SERVING_MIN_Q4_RATIO:
+            violations.append(
+                f"serving q4 weight compression {cur_sv['q4_ratio_vs_bf16']:.2f}x "
+                f"fell below the {SERVING_MIN_Q4_RATIO:.1f}x floor vs bf16"
             )
     return violations

@@ -294,6 +294,14 @@ def grad_comm_wire() -> List[Tuple[str, float, str]]:
     return rows
 
 
+def serving_throughput() -> List[Tuple[str, float, str]]:
+    """Serving engine tokens/sec/slot vs the legacy per-token host-sync loop,
+    plus the structural q4 weight-byte row (``benchmarks/serving.py``)."""
+    from benchmarks.serving import serving_throughput as rows
+
+    return rows()
+
+
 ALL_TABLES = [
     tab1_second_moment_ablation,
     tab2_optimizer_comparison,
@@ -304,4 +312,5 @@ ALL_TABLES = [
     thm1_sgdm_convergence,
     stacked_fused_steptime,
     grad_comm_wire,
+    serving_throughput,
 ]

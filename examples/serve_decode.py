@@ -1,6 +1,6 @@
 """Batched serving with continuous batching over a reduced-config model.
 
-    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-2b
+    PYTHONPATH=src python examples/serve_decode.py --arch gemma2-2b --weights q4
 """
 
 import argparse
@@ -9,28 +9,40 @@ import jax
 
 from repro.configs import ARCHS, reduced_config
 from repro.models import init_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import Request, ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="internlm2-1.8b", choices=list(ARCHS))
     ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--weights", default="bf16", choices=("bf16", "q4"))
+    ap.add_argument("--temperature", type=float, default=0.7)
+    ap.add_argument("--top-k", type=int, default=20)
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     if cfg.family == "encdec" or cfg.input_mode == "embeds":
         raise SystemExit(f"{args.arch}: use a token-decoder arch for this demo")
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, max_batch=3, s_max=256)
+    eng = ServeEngine(cfg, params, max_batch=3, s_max=256, weights=args.weights)
 
-    for i in range(args.requests):
-        eng.submit(Request(rid=i, prompt=[1 + i, 2 + i, 3 + i], max_new_tokens=8))
+    reqs = [
+        Request(rid=i, prompt=[1 + i, 2 + i, 3 + i], max_new_tokens=8,
+                temperature=args.temperature, top_k=args.top_k)
+        for i in range(args.requests)
+    ]
+    for r in reqs:
+        eng.submit(r)
     eng.run()
-    for i in range(args.requests):
-        pass
-    print(f"served {args.requests} requests with continuous batching "
-          f"(slots={eng.max_batch})")
+    for r in reqs:
+        print(f"  rid={r.rid}: {r.output}")
+    rep = eng.weight_bytes()
+    print(
+        f"served {args.requests} requests with continuous batching "
+        f"(slots={eng.max_batch}, weights={rep['format']}, "
+        f"{rep['total_serve_bytes']:,} weight bytes)"
+    )
 
 
 if __name__ == "__main__":

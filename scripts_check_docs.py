@@ -1,0 +1,162 @@
+#!/usr/bin/env python
+"""Docs gate: intra-repo link check + executable fenced python snippets.
+
+Two failure modes that rot a docs layer, both turned into CI failures:
+
+* **Dead links** — every inline markdown link in ``docs/*.md`` whose target
+  is not an external URL (``http(s)://``, ``mailto:``) or a pure fragment
+  must resolve to an existing file, relative to the page that links it.
+* **Stale code** — fenced ```` ```python ```` blocks are the *executable*
+  convention (see ``docs/README.md``); each page's blocks are concatenated
+  top to bottom and run in one subprocess with ``PYTHONPATH=src``, so an
+  API drift that breaks a documented snippet breaks the build.  Plain
+  ``` fences stay illustrative and are never executed.
+
+    python scripts_check_docs.py            # check everything, exit 1 on rot
+    python scripts_check_docs.py --no-run   # links only (fast)
+
+Run from the repo root (the CI docs job does exactly this).
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import os
+import re
+import subprocess
+import sys
+import time
+
+DOCS_GLOB = os.path.join("docs", "*.md")
+# inline links [text](target); images ![alt](target) match too via the [
+_LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_FENCE_RE = re.compile(r"^```(\S*)\s*$")
+_EXTERNAL = ("http://", "https://", "mailto:")
+
+
+def check_links(path: str) -> list:
+    """Dead intra-repo link targets in one markdown file."""
+    dead = []
+    base = os.path.dirname(path)
+    text = open(path).read()
+    # fenced blocks routinely contain ``foo[x](y)``-shaped code; strip them
+    # so only prose links are checked
+    prose = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in _LINK_RE.findall(prose):
+        if target.startswith(_EXTERNAL) or target.startswith("#"):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(os.path.join(base, rel))
+        if not os.path.exists(resolved):
+            dead.append(f"{path}: dead link -> {target}")
+    return dead
+
+
+def python_blocks(path: str) -> list:
+    """The fenced ```python blocks of one file, in order."""
+    blocks, cur, lang = [], None, None
+    for line in open(path):
+        m = _FENCE_RE.match(line.strip())
+        if m and cur is None:
+            lang, cur = m.group(1), []
+        elif m:
+            if lang == "python":
+                blocks.append("".join(cur))
+            cur, lang = None, None
+        elif cur is not None:
+            cur.append(line)
+    return blocks
+
+
+def run_snippets(path: str) -> tuple:
+    """Execute a page's python blocks top to bottom in one process."""
+    blocks = python_blocks(path)
+    if not blocks:
+        return True, 0, 0.0, ""
+    script = "\n".join(
+        f"# --- {path} block {i + 1} ---\n{b}" for i, b in enumerate(blocks)
+    )
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    t0 = time.perf_counter()
+    proc = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    wall = time.perf_counter() - t0
+    out = (proc.stdout + proc.stderr).strip()
+    return proc.returncode == 0, len(blocks), wall, out
+
+
+def _step_summary(rows, failures) -> None:
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if not path:
+        return
+    lines = [
+        "## docs gate",
+        "",
+        "| page | links | python blocks | snippet run |",
+        "|---|---|---|---|",
+    ]
+    lines += [
+        f"| {p} | {links} | {nblocks} | {status} |"
+        for p, links, nblocks, status in rows
+    ]
+    lines += [
+        "",
+        f"**{len(failures)} failure(s)**" if failures else "Status: clean.",
+    ]
+    with open(path, "a") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument(
+        "--no-run", action="store_true",
+        help="skip snippet execution (link check only)",
+    )
+    args = ap.parse_args()
+
+    pages = sorted(glob.glob(DOCS_GLOB))
+    if not pages:
+        print("FAIL: no docs found at", DOCS_GLOB, file=sys.stderr)
+        return 1
+
+    failures, rows = [], []
+    for page in pages:
+        dead = check_links(page)
+        failures += dead
+        link_status = "ok" if not dead else f"{len(dead)} dead"
+        if args.no_run:
+            rows.append((page, link_status, "-", "skipped"))
+            print(f"{page}: links {link_status}")
+            continue
+        ok, nblocks, wall, out = run_snippets(page)
+        status = (
+            "-" if nblocks == 0
+            else f"ok ({wall:.1f}s)" if ok
+            else "FAILED"
+        )
+        rows.append((page, link_status, nblocks or "-", status))
+        print(f"{page}: links {link_status}, {nblocks} python block(s) {status}")
+        if not ok:
+            failures.append(f"{page}: snippet execution failed")
+            print(out, file=sys.stderr)
+
+    _step_summary(rows, failures)
+    if failures:
+        print(f"\nFAIL: {len(failures)} docs problem(s)", file=sys.stderr)
+        for f in failures:
+            print(" -", f, file=sys.stderr)
+        return 1
+    print(f"\nOK: {len(pages)} pages, links resolve, snippets run")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -78,6 +78,19 @@ def _write_step_summary(current, baseline, violations) -> None:
             f"{cm['wire_bytes']:,} B vs fp32 {cm['fp32_wire_bytes']:,} B "
             f"(**{cm['ratio_vs_fp32']:.2f}x fewer**, GPT-2-M tree).",
         ]
+    sv = current.get("serving")
+    if sv:
+        lines += [
+            "",
+            f"Serving ({sv['slots']} slots x {sv['tokens_per_slot']} tokens, "
+            f"drain_every={sv['drain_every']}): "
+            f"{sv['engine_tok_per_sec_per_slot']:.0f} tok/s/slot, "
+            f"**{sv['speedup_vs_host_sync_loop']:.1f}x** over the per-token "
+            f"host-sync loop (floor 3x); q4 weights "
+            f"{sv['q4_weight_bytes']:,} B vs bf16 "
+            f"{sv['bf16_weight_bytes']:,} B "
+            f"(**{sv['q4_ratio_vs_bf16']:.2f}x fewer**, floor 3.5x).",
+        ]
     lines += [
         "",
         (

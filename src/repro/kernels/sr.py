@@ -42,6 +42,7 @@ __all__ = [
     "STREAM_M",
     "STREAM_V",
     "STREAM_GRAD",
+    "STREAM_SAMPLE",
 ]
 
 # Stream ids separating the two moments' noise within one (key, element) pair.
@@ -50,6 +51,10 @@ STREAM_V = 1
 # Gradient-transport quantization (repro.comms) — its own counter stream so
 # the wire noise never collides with either moment's even under a shared key.
 STREAM_GRAD = 2
+# Token sampling in the serving engine (repro.serve.sampling): per-request
+# Gumbel noise, counter = generated-token index, so a request's sampled
+# stream is independent of which cache slot it lands in.
+STREAM_SAMPLE = 3
 
 _PARITY = np.uint32(0x1BD11BDA)  # Threefry key-schedule parity constant
 _ROT = (13, 15, 26, 6, 17, 29, 16, 24)

@@ -1,15 +1,17 @@
-"""Serving CLI: continuous-batching decode on a reduced config.
+"""Serving CLI: throughput engine on a reduced config.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --requests 8 \
+        --weights q4 --temperature 0.8 --top-k 40
 """
 
 import argparse
+import time
 
 import jax
 
 from repro.configs import ARCHS, reduced_config
 from repro.models import init_model
-from repro.serve.engine import Request, ServeEngine
+from repro.serve import Request, ServeEngine, format_weight_table
 
 
 def main():
@@ -18,21 +20,46 @@ def main():
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-batch", type=int, default=2)
     ap.add_argument("--max-new-tokens", type=int, default=8)
+    ap.add_argument("--weights", default="bf16", choices=("bf16", "q4"),
+                    help="serving weight format (q4 = 4-bit block-quantized)")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples on device")
+    ap.add_argument("--top-k", type=int, default=0, help="0 = full vocab")
+    ap.add_argument("--seed", type=int, default=0, help="sampling stream seed")
+    ap.add_argument("--drain-every", type=int, default=8,
+                    help="decode steps per host sync")
     args = ap.parse_args()
 
     cfg = reduced_config(args.arch)
     if cfg.family == "encdec" or cfg.input_mode == "embeds":
         raise SystemExit(f"{args.arch}: token-decoder archs only in this CLI")
     params, _ = init_model(jax.random.PRNGKey(0), cfg)
-    eng = ServeEngine(cfg, params, max_batch=args.max_batch, s_max=256)
-    for i in range(args.requests):
-        eng.submit(Request(rid=i, prompt=[1 + i, 2 + i],
-                           max_new_tokens=args.max_new_tokens))
+    eng = ServeEngine(
+        cfg, params, max_batch=args.max_batch, s_max=256,
+        weights=args.weights, drain_every=args.drain_every, seed=args.seed,
+    )
+    reqs = [
+        Request(rid=i, prompt=[1 + i, 2 + i],
+                max_new_tokens=args.max_new_tokens,
+                temperature=args.temperature, top_k=args.top_k)
+        for i in range(args.requests)
+    ]
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
     eng.run()
-    for i in range(args.requests):
-        pass
-    print(f"served {args.requests} requests, "
-          f"{args.max_new_tokens} tokens each (greedy, continuous batching)")
+    wall = time.perf_counter() - t0
+
+    total_tokens = sum(len(r.output) for r in reqs)
+    mode = "greedy" if args.temperature <= 0 else (
+        f"T={args.temperature} top_k={args.top_k}"
+    )
+    print(format_weight_table([eng.weight_bytes()], title="serving weights"))
+    print(
+        f"served {args.requests} requests / {total_tokens} tokens in "
+        f"{wall:.2f}s ({mode}, drain_every={args.drain_every}, "
+        f"{total_tokens / wall / args.max_batch:.1f} tok/s/slot incl. compile)"
+    )
 
 
 if __name__ == "__main__":

@@ -10,6 +10,7 @@ from repro.models.model import (
     loss_fn,
     plan_scan_units,
     prefill,
+    prefill_with_cache,
 )
 
 __all__ = [
@@ -19,6 +20,7 @@ __all__ = [
     "loss_fn",
     "forward_hidden",
     "prefill",
+    "prefill_with_cache",
     "decode_step",
     "init_serve_cache",
     "plan_scan_units",

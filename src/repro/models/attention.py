@@ -22,7 +22,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-__all__ = ["train_attention", "decode_attention", "KVCache"]
+__all__ = ["train_attention", "decode_attention", "KVCache", "cache_prefill"]
 
 NEG_INF = -1e30
 
@@ -211,6 +211,40 @@ def decode_attention(
         (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), jnp.arange(nk))
     out = acc / jnp.maximum(l, 1e-30)[..., None]
     return out.reshape(B, 1, Hq, D).astype(q.dtype)
+
+
+def cache_prefill(
+    cache: KVCache,
+    k_new: jnp.ndarray,    # (B, S, Hkv, D) — positions 0..S-1 in order
+    v_new: jnp.ndarray,    # (B, S, Hkv, D)
+    lengths: jnp.ndarray,  # (B,) int32 — real prompt length per row (rest pad)
+) -> KVCache:
+    """Write a whole (right-padded) prompt into the circular cache at once.
+
+    Expressed as a gather, not a scatter: for each slot ``s`` the entry that
+    a token-at-a-time prefill would leave behind is the *largest* position
+    ``p < len`` with ``p % Smax == s`` (circular overwrite keeps the latest).
+    Solving for it directly sidesteps duplicate-index scatter hazards and
+    handles every per-row case uniformly — short prompts leave trailing
+    slots untouched (pos stays -1 on a fresh cache), prompts longer than the
+    slot count keep exactly their trailing ``Smax`` positions (what a
+    windowed layer's circular cache retains anyway).
+    """
+    B, S = k_new.shape[:2]
+    Smax = cache.k.shape[1]
+    s = jnp.arange(Smax, dtype=jnp.int32)[None, :]          # (1, Smax)
+    len_b = lengths.astype(jnp.int32)[:, None]              # (B, 1)
+    # Largest p in [0, len) with p ≡ s (mod Smax); negative ⇒ slot unused.
+    p_star = s + jnp.floor_divide(len_b - 1 - s, Smax) * Smax  # (B, Smax)
+    valid = p_star >= 0
+    pidx = jnp.clip(p_star, 0, S - 1)
+    b_idx = jnp.arange(B)[:, None]
+    k_sel = k_new[b_idx, pidx].astype(cache.k.dtype)
+    v_sel = v_new[b_idx, pidx].astype(cache.v.dtype)
+    k = jnp.where(valid[..., None, None], k_sel, cache.k)
+    v = jnp.where(valid[..., None, None], v_sel, cache.v)
+    p = jnp.where(valid, p_star, cache.pos)
+    return KVCache(k, v, p)
 
 
 def cache_update(cache: KVCache, k_new: jnp.ndarray, v_new: jnp.ndarray, pos: jnp.ndarray) -> KVCache:

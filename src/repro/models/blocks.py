@@ -104,8 +104,16 @@ def apply_attention(
     kv_source: Optional[jnp.ndarray] = None,  # cross-attention source
     cache: Optional[KVCache] = None,
     cur_pos: Optional[jnp.ndarray] = None,    # (B,) decode position
+    kv_lengths: Optional[jnp.ndarray] = None,  # (B,) prefill prompt lengths
 ):
-    """Returns (out, new_cache)."""
+    """Returns (out, new_cache).
+
+    Three cache regimes: ``cache + cur_pos`` with a single-token input is a
+    decode step (circular write + position-masked attention);
+    ``cache + kv_lengths`` with a full sequence is a one-shot prefill (the
+    forward runs as train attention and the whole K/V sequence is written
+    into the cache in one gather); cache-less calls are plain training.
+    """
     cd = COMPUTE_DTYPE
     src = x if kv_source is None else kv_source
     q = jnp.einsum("bsd,dhe->bshe", x.astype(cd), p["wq"].astype(cd))
@@ -150,6 +158,10 @@ def apply_attention(
             q_chunk=cfg.attn_q_chunk, k_chunk=cfg.attn_k_chunk,
             unroll=cfg.unroll_scans,
         )
+        if cache is not None and kv_source is None and kv_lengths is not None:
+            # one-shot prefill: park the whole (post-rope) K/V sequence in
+            # the decode cache; right-padded tails stay unwritten (pos -1)
+            new_cache = attn_lib.cache_prefill(cache, k, v, kv_lengths)
     y = jnp.einsum("bshe,hed->bsd", out.astype(cd), p["wo"].astype(cd))
     return y, new_cache
 
@@ -202,10 +214,12 @@ def _init_dense(key, cfg):
     return params, axes
 
 
-def _apply_dense(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_dense(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+                 kv_lengths=None):
     h, new_cache = apply_attention(
         p["attn"], _norm_apply(cfg, x, p["norm1"]), cfg,
         window=spec.window, positions=positions, cache=cache, cur_pos=cur_pos,
+        kv_lengths=kv_lengths,
     )
     if cfg.sandwich_norm:
         h = _norm_apply(cfg, h, p["post1"])
@@ -228,10 +242,12 @@ def _init_moe(key, cfg):
     )
 
 
-def _apply_moe(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_moe(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+               kv_lengths=None):
     h, new_cache = apply_attention(
         p["attn"], _norm_apply(cfg, x, p["norm1"]), cfg,
         window=spec.window, positions=positions, cache=cache, cur_pos=cur_pos,
+        kv_lengths=kv_lengths,
     )
     x = x + h
     out, aux = moe_apply(
@@ -272,7 +288,8 @@ def _init_mlstm(key, cfg):
     return params, axes
 
 
-def _apply_mlstm(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_mlstm(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+                 kv_lengths=None):
     cd = COMPUTE_DTYPE
     D = cfg.d_model
     H, dh = cfg.num_heads, D // cfg.num_heads
@@ -287,6 +304,13 @@ def _apply_mlstm(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
     i_gate, f_gate = jnp.split(gates, 2, axis=-1)
     log_a = jax.nn.log_sigmoid(f_gate)           # (B, S, H)
     k = k * jax.nn.sigmoid(i_gate)[..., None]    # fold input gate into k
+
+    if kv_lengths is not None and x.shape[1] > 1:
+        # right-padded prefill: an identity recurrence step is a_t = 1,
+        # k_t = 0, so padded steps carry S/n through exactly
+        step_ok = jnp.arange(x.shape[1])[None, :] < kv_lengths[:, None]
+        log_a = jnp.where(step_ok[..., None], log_a, 0.0)
+        k = jnp.where(step_ok[..., None, None], k, 0.0)
 
     if cache is not None and x.shape[1] == 1:
         y, new_state = gla_lib.gla_decode_step(q, k, v, log_a, cache)
@@ -330,12 +354,17 @@ def _init_slstm(key, cfg):
     return params, axes
 
 
-def _apply_slstm(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_slstm(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+                 kv_lengths=None):
     cd = COMPUTE_DTYPE
     h = _norm_apply(cfg, x, p["norm1"])
     gates_x = jnp.einsum("bsd,dge->bsge", h.astype(cd), p["w_gates"].astype(cd))
+    step_mask = None
+    if kv_lengths is not None and x.shape[1] > 1:
+        step_mask = jnp.arange(x.shape[1])[None, :] < kv_lengths[:, None]
     hs, new_state = gla_lib.slstm_scan(
-        gates_x, p["r_gates"], cfg.num_heads, init_state=cache
+        gates_x, p["r_gates"], cfg.num_heads, init_state=cache,
+        step_mask=step_mask,
     )
     out = jnp.einsum("bsd,de->bse", hs.astype(cd), p["w_out"].astype(cd))
     x = x + out
@@ -388,7 +417,8 @@ def _init_hymba(key, cfg):
     return params, axes
 
 
-def _apply_hymba(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_hymba(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+                 kv_lengths=None):
     """Parallel attention + Mamba/SSD heads, outputs averaged (Hymba)."""
     cd = COMPUTE_DTYPE
     D, H = cfg.d_model, cfg.num_heads
@@ -398,7 +428,7 @@ def _apply_hymba(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
 
     a_out, new_kv = apply_attention(
         p["attn"], h, cfg, window=spec.window, positions=positions,
-        cache=cache["attn"], cur_pos=cur_pos,
+        cache=cache["attn"], cur_pos=cur_pos, kv_lengths=kv_lengths,
     )
 
     up = jnp.einsum("bsd,de->bse", h.astype(cd), p["ssm_in"].astype(cd))
@@ -411,6 +441,12 @@ def _apply_hymba(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
     k = jnp.einsum("bsd,dhn->bshn", xm, p["ssm_B"].astype(cd))
     q = jnp.einsum("bsd,dhn->bshn", xm, p["ssm_C"].astype(cd))
     v = xm.reshape(*xm.shape[:2], H, dh) * dt[..., None].astype(cd)
+
+    if kv_lengths is not None and x.shape[1] > 1:
+        # padded prefill: a_t = 1, k_t = 0 makes the step an exact identity
+        step_ok = jnp.arange(x.shape[1])[None, :] < kv_lengths[:, None]
+        log_a = jnp.where(step_ok[..., None], log_a, 0.0)
+        k = jnp.where(step_ok[..., None, None], k, 0.0)
 
     if cache["ssm"] is not None and x.shape[1] == 1:
         y, new_ssm = gla_lib.gla_decode_step(q, k, v, log_a, cache["ssm"], normalize=False)
@@ -443,7 +479,8 @@ def _init_enc(key, cfg):
     )
 
 
-def _apply_enc(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_enc(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+               kv_lengths=None):
     h, _ = apply_attention(
         p["attn"], _norm_apply(cfg, x, p["norm1"]), cfg,
         window=0, causal=False, positions=None,
@@ -469,11 +506,13 @@ def _init_dec(key, cfg):
     )
 
 
-def _apply_dec(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None):
+def _apply_dec(p, x, spec, cfg, *, positions, cache, cur_pos, enc_out=None,
+               kv_lengths=None):
     cache = cache or {"self": None, "cross": None}
     h, new_self = apply_attention(
         p["self"], _norm_apply(cfg, x, p["norm1"]), cfg,
         window=spec.window, positions=None, cache=cache["self"], cur_pos=cur_pos,
+        kv_lengths=kv_lengths,
     )
     x = x + h
     h, _ = apply_attention(

@@ -164,24 +164,28 @@ def slstm_scan(
     n_heads: int,
     *,
     init_state: Optional[SLSTMState] = None,
+    step_mask: Optional[jnp.ndarray] = None,  # (B, S) bool; False = freeze state
 ) -> Tuple[jnp.ndarray, SLSTMState]:
     """xLSTM sLSTM cell (exponential gating, max stabilizer, per-head
     block-diagonal recurrence). Sequential by construction — lax.scan over
-    time; the HLO stays one cell body regardless of sequence length."""
+    time; the HLO stays one cell body regardless of sequence length.
+
+    ``step_mask`` marks which timesteps are real: masked-off steps carry the
+    previous state through unchanged (exponential gating has no neutral
+    input, so right-padded prefill batches need an explicit state select).
+    """
     B, S, _, D = gates_x.shape
     dh = D // n_heads
 
     def heads(x):  # (B, D) -> (B, H, dh)
         return x.reshape(B, n_heads, dh)
 
-    def unheads(x):
-        return x.reshape(B, D)
-
     if init_state is None:
         z = jnp.zeros((B, D), jnp.float32)
         init_state = SLSTMState(z, z, z, jnp.full((B, D), -1e30, jnp.float32))
 
-    def body(state, g_t):  # g_t: (B, 4, D)
+    def body(state, inp):
+        g_t, mask_t = inp  # (B, 4, D), (B,)
         # recurrent contribution: R h_{t-1}, block-diagonal per head
         rh = jnp.einsum("hgij,bhj->bghi", r_weights.astype(jnp.float32), heads(state.h))
         pre = g_t.astype(jnp.float32) + rh.reshape(B, 4, D)
@@ -195,8 +199,17 @@ def slstm_scan(
         n_new = f_p * state.n + i_p
         h_tilde = c_new / jnp.maximum(jnp.abs(n_new), 1.0)
         h_new = jax.nn.sigmoid(o_t) * h_tilde
-        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+        new_state = SLSTMState(c_new, n_new, h_new, m_new)
+        keep = mask_t[:, None]
+        new_state = SLSTMState(
+            *(jnp.where(keep, n, o) for n, o in zip(new_state, state))
+        )
+        return new_state, h_new
 
     gates_t = gates_x.swapaxes(0, 1)  # (S, B, 4, D)
-    final, hs = jax.lax.scan(body, init_state, gates_t)
+    if step_mask is None:
+        mask_t = jnp.ones((S, B), bool)
+    else:
+        mask_t = step_mask.swapaxes(0, 1).astype(bool)
+    final, hs = jax.lax.scan(body, init_state, (gates_t, mask_t))
     return hs.swapaxes(0, 1).astype(gates_x.dtype), final

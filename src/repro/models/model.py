@@ -36,7 +36,16 @@ from repro.models.layers import (
     softcap,
 )
 
-__all__ = ["ModelConfig", "ScanUnit", "init_model", "loss_fn", "prefill", "decode_step", "init_serve_cache"]
+__all__ = [
+    "ModelConfig",
+    "ScanUnit",
+    "init_model",
+    "loss_fn",
+    "prefill",
+    "prefill_with_cache",
+    "decode_step",
+    "init_serve_cache",
+]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -207,6 +216,7 @@ def _run_units(
     enc_out=None,
     caches: Optional[List[Any]] = None,
     cur_pos=None,
+    kv_lengths=None,
     collect_cache: bool = False,
     unit_axes: Optional[List[Any]] = None,
 ):
@@ -237,7 +247,7 @@ def _run_units(
                 h, nc, a = apply_block(
                     p_sub, h, spec, cfg,
                     positions=positions, cache=sub_cache, cur_pos=cur_pos,
-                    enc_out=enc_out,
+                    enc_out=enc_out, kv_lengths=kv_lengths,
                 )
                 new_c[f"sub{si}"] = nc
                 aux = aux + a
@@ -375,7 +385,7 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
     """Prefill pass: final hidden states + last-position logits.
 
     (The dry-run's prefill_32k cell lowers this; cache materialization for
-    chat-style serving is exercised by the small-scale serve tests.)
+    chat-style serving goes through ``prefill_with_cache``.)
     """
     x, _ = forward_hidden(params, cfg, batch)
     last = x[:, -1]
@@ -386,3 +396,54 @@ def prefill(params, cfg: ModelConfig, batch: Dict[str, jnp.ndarray]):
     if cfg.final_softcap > 0:
         logits = softcap(logits, cfg.final_softcap)
     return logits
+
+
+def prefill_with_cache(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,   # (B, S) int32, right-padded prompts
+    lengths: jnp.ndarray,  # (B,) int32 real prompt length per row
+    caches: List[Any],
+):
+    """One-shot prompt consumption for serving (token-decoder archs only).
+
+    Runs the full-sequence forward once over the right-padded prompt batch,
+    writing K/V (attention) and carried recurrent states (mLSTM/sLSTM/SSM)
+    into the decode caches, and returns the logits at each row's *last real
+    token* — the distribution the first generated token is sampled from.
+    Padding is inert by construction: causal attention never looks forward
+    to padded keys, padded cache slots keep pos = -1, and recurrent paths
+    run identity steps (a = 1, k = 0 / state freeze) on padded positions.
+
+    Returns ``(logits (B, V) fp32, new_caches)``.
+    """
+    if cfg.family != "decoder" or cfg.input_mode != "tokens":
+        raise ValueError("prefill_with_cache serves token-decoder archs only")
+    units = plan_scan_units(cfg.blocks)
+    x = embed_lookup(params["embed"], tokens)
+    B, S = tokens.shape
+
+    if cfg.rope_variant == "mrope":
+        pos1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+        positions = jnp.stack([pos1] * 3)
+    elif cfg.rope_variant == "none":
+        positions = None
+        x = x + sinusoidal_positions(S, cfg.d_model)[None].astype(x.dtype)
+    else:
+        positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    from repro.sharding.context import ctx_axes
+
+    x, new_caches, _ = _run_units(
+        cfg, units, params["decoder"], x, positions=positions,
+        caches=caches, kv_lengths=lengths, unit_axes=ctx_axes("decoder"),
+    )
+    x = _final_norm(cfg, x, params["final_norm"])
+    last = x[jnp.arange(B), jnp.maximum(lengths - 1, 0)]  # (B, D)
+    logits = jnp.einsum(
+        "bd,dv->bv", last.astype(COMPUTE_DTYPE),
+        _head_weight(cfg, params).astype(COMPUTE_DTYPE),
+    ).astype(jnp.float32)
+    if cfg.final_softcap > 0:
+        logits = softcap(logits, cfg.final_softcap)
+    return logits, new_caches

@@ -1,0 +1,25 @@
+"""Serving: continuous-batching engine, on-device sampling, weight formats."""
+
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.sampling import sample_tokens, request_key_words
+from repro.serve.weights import (
+    WEIGHT_MODES,
+    WEIGHT_Q4,
+    format_weight_table,
+    materialize,
+    prepare_params,
+    weight_report,
+)
+
+__all__ = [
+    "Request",
+    "ServeEngine",
+    "sample_tokens",
+    "request_key_words",
+    "WEIGHT_MODES",
+    "WEIGHT_Q4",
+    "prepare_params",
+    "materialize",
+    "weight_report",
+    "format_weight_table",
+]

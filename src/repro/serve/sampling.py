@@ -1,0 +1,89 @@
+"""On-device token sampling with counter-based Threefry streams.
+
+The engine keeps the decode loop on device for N tokens at a time, so the
+sampler must be (a) jittable, (b) per-slot parameterized (temperature /
+top-k vary per request), and (c) reproducible regardless of *where* a
+request happens to sit: slot assignment is a scheduling accident, and an
+engine restart replays the queue in a different admission order.
+
+Key derivation (mirrors the SR stream discipline of ``repro.kernels.sr``):
+
+    request key   = fold_in(PRNGKey(engine seed), request id)
+    token noise   = threefry2x32(key words,
+                                 counter0 = generated-token index,
+                                 counter1 = STREAM_SAMPLE)
+    logit uniform = threefry2x32(token noise words,
+                                 counter0 = vocab index, counter1 = 0)
+
+Because the counters are (token index, vocab index) — never the slot id,
+batch position, or wall-clock step — the sampled stream for a request is a
+pure function of (engine seed, request id, model state).  Reshuffling slots
+or restarting the engine replays the identical tokens (test-enforced).
+
+Sampling itself is the Gumbel-max trick: argmax(logits/T + G) over the
+top-k support.  Temperature 0 short-circuits to plain argmax (greedy), and
+``top_k`` 0 means the full vocabulary.  Top-k is per-slot *dynamic* (no
+static-k ``lax.top_k``): the k-th largest logit is found by sorting once,
+and ties at the threshold are all admitted.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sr import STREAM_SAMPLE, key_words, threefry2x32, uniform_from_bits
+
+__all__ = ["request_key_words", "sample_tokens", "STREAM_SAMPLE"]
+
+_TINY = 1e-12
+
+
+def request_key_words(seed: int, rid) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """The two uint32 key words for one request's sampling stream.
+
+    ``rid`` may be a python int or an int array (vmapped fold-in); the words
+    depend only on (seed, rid) — the slot-order-invariance anchor.
+    """
+    base = jax.random.PRNGKey(seed)
+    rid = jnp.asarray(rid, jnp.uint32)
+    if rid.ndim == 0:
+        return key_words(jax.random.fold_in(base, rid))
+    return jax.vmap(lambda r: key_words(jax.random.fold_in(base, r)))(rid)
+
+
+def sample_tokens(
+    logits: jnp.ndarray,       # (B, V) fp32
+    kw: jnp.ndarray,           # (B, 2) uint32 per-slot request key words
+    gen_idx: jnp.ndarray,      # (B,) int32 — index of the token being sampled
+    temperature: jnp.ndarray,  # (B,) fp32; <= 0 means greedy
+    top_k: jnp.ndarray,        # (B,) int32; <= 0 means full vocab
+) -> jnp.ndarray:
+    """Sample one token per slot. Jittable; returns (B,) int32."""
+    B, V = logits.shape
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    # Per-(request, token) subkey, then per-logit uniforms: counter is the
+    # vocab index, so the draw is independent of batch layout.
+    tk0, tk1 = threefry2x32(
+        kw[:, 0], kw[:, 1], gen_idx.astype(jnp.uint32), jnp.uint32(STREAM_SAMPLE)
+    )
+    vocab = jnp.arange(V, dtype=jnp.uint32)[None, :]
+    bits, _ = threefry2x32(tk0[:, None], tk1[:, None], vocab, jnp.uint32(0))
+    u = uniform_from_bits(bits)                      # (B, V) in [0, 1)
+    gumbel = -jnp.log(-jnp.log(u + _TINY) + _TINY)
+
+    temp = jnp.maximum(temperature, _TINY)[:, None]
+    scaled = logits / temp
+
+    # Dynamic per-slot top-k: threshold at the k-th largest logit (ties in).
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    k_idx = jnp.clip(top_k - 1, 0, V - 1)
+    kth = sorted_desc[jnp.arange(B), k_idx]          # (B,)
+    allowed = (top_k[:, None] <= 0) | (logits >= kth[:, None])
+
+    noisy = jnp.where(allowed, scaled + gumbel, -jnp.inf)
+    sampled = jnp.argmax(noisy, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

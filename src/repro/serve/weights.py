@@ -1,0 +1,166 @@
+"""Serving weight formats: bf16 cast or 4-bit block-quantized, with exact
+byte accounting.
+
+The bitsandbytes line of work framed weight quantization for inference as a
+"change one line" story; this module is that line for the serving engine.
+``prepare_params`` rewrites the fp32 master tree into the serving format:
+
+* ``bf16`` — matmul-scale leaves cast to bf16 (the compute dtype anyway);
+  small leaves (norm scales, biases, anything at or under ``threshold``
+  elements or below rank 2) stay fp32, so serving numerics match the fp32
+  masters bit-for-bit (the model casts to bf16 at each matmul regardless).
+* ``q4``  — the same eligible leaves stored as ``QuantizedTensor`` under
+  B128/DE (blockwise-128 normalization, 4-bit dynamic-exponent map with a
+  real zero code — the Dettmers dynamic map, which suits weight
+  distributions; the zero-excluding linear map is for second moments).
+
+The HBM-resident copy stays compressed; ``materialize`` dequantizes inside
+the jitted prefill/decode step (dequant-on-use), so the fp32 view is a
+transient the compiler can fuse into the consuming matmul.
+
+``weight_report`` mirrors ``repro.comms.accounting.wire_report``: structural
+per-leaf rows (works on shapes alone), totals, and the q4-vs-bf16 ratio
+that the serving drift gate tracks.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.optimizers.base import tree_paths
+from repro.core.quantizer import (
+    QuantConfig,
+    QuantizedTensor,
+    dequantize,
+    quantize,
+    quantized_nbytes,
+)
+
+__all__ = [
+    "WEIGHT_Q4",
+    "WEIGHT_MODES",
+    "prepare_params",
+    "materialize",
+    "weight_report",
+    "format_weight_table",
+]
+
+# B128/DE: blockwise-128 absmax scales + the signed dynamic-exponent map.
+WEIGHT_Q4 = QuantConfig(
+    bits=4, normalization="blockwise", block_size=128, mapping="de", signed=True
+)
+WEIGHT_MODES = ("bf16", "q4")
+
+# Same small-tensor cutoff the optimizer states use (App. D.1): leaves this
+# small are noise in the memory budget and precision-critical (norm scales).
+DEFAULT_THRESHOLD = 4096
+
+
+def _eligible(shape, threshold: int) -> bool:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    return len(shape) >= 2 and n > threshold
+
+
+def prepare_params(params, mode: str, *, threshold: int = DEFAULT_THRESHOLD):
+    """fp32 master tree -> serving tree (``bf16`` casts or ``q4`` tensors)."""
+    if mode not in WEIGHT_MODES:
+        raise ValueError(f"unknown weights mode {mode!r}; want one of {WEIGHT_MODES}")
+
+    def prep(leaf):
+        if not _eligible(leaf.shape, threshold):
+            return jnp.asarray(leaf, jnp.float32)
+        if mode == "bf16":
+            return jnp.asarray(leaf, jnp.bfloat16)
+        return quantize(jnp.asarray(leaf, jnp.float32), WEIGHT_Q4)
+
+    return jax.tree_util.tree_map(prep, params)
+
+
+def materialize(serving_params):
+    """Dequantize-on-use: expand ``QuantizedTensor`` leaves to fp32 views.
+
+    Called *inside* the jitted step, so the expansion is a transient — the
+    persistent HBM copy keeps the compressed layout.
+    """
+    return jax.tree_util.tree_map(
+        lambda x: dequantize(x) if isinstance(x, QuantizedTensor) else x,
+        serving_params,
+        is_leaf=lambda x: isinstance(x, QuantizedTensor),
+    )
+
+
+def _leaf_bytes(shape, mode: str, threshold: int) -> int:
+    n = 1
+    for d in shape:
+        n *= int(d)
+    if not _eligible(shape, threshold):
+        return n * 4
+    if mode == "bf16":
+        return n * 2
+    return quantized_nbytes(shape, WEIGHT_Q4)
+
+
+def weight_report(params, mode: str, *, threshold: int = DEFAULT_THRESHOLD) -> Dict:
+    """Per-leaf and total weight bytes under a serving mode.
+
+    ``params`` is any tree of array-likes with ``.shape`` (concrete arrays
+    or ``ShapeDtypeStruct`` — structural, nothing is allocated). Totals are
+    exact; ``ratio_vs_bf16`` is what the drift gate floors at 3.5x.
+    """
+    if mode not in WEIGHT_MODES:
+        raise ValueError(f"unknown weights mode {mode!r}; want one of {WEIGHT_MODES}")
+    leaves = jax.tree_util.tree_leaves(params)
+    paths = jax.tree_util.tree_leaves(tree_paths(params))
+    rows: List[Dict[str, Any]] = []
+    total = total_bf16 = 0
+    quantized_leaves = 0
+    for path, leaf in zip(paths, leaves):
+        shape = tuple(leaf.shape)
+        nbytes = _leaf_bytes(shape, mode, threshold)
+        bf16 = _leaf_bytes(shape, "bf16", threshold)
+        quantized = mode == "q4" and _eligible(shape, threshold)
+        quantized_leaves += int(quantized)
+        rows.append(
+            {
+                "path": path,
+                "shape": shape,
+                "bf16_bytes": bf16,
+                "serve_bytes": nbytes,
+                "quantized": quantized,
+            }
+        )
+        total += nbytes
+        total_bf16 += bf16
+    return {
+        "mode": mode,
+        "format": WEIGHT_Q4.name if mode == "q4" else "bf16",
+        "leaves": rows,
+        "n_leaves": len(rows),
+        "quantized_leaves": quantized_leaves,
+        "total_bf16_bytes": int(total_bf16),
+        "total_serve_bytes": int(total),
+        "ratio_vs_bf16": round(total_bf16 / total, 4) if total else 1.0,
+    }
+
+
+def format_weight_table(reports: List[Dict], title: str = "") -> str:
+    """Markdown weight-memory table (CI step summary / docs)."""
+    lines = []
+    if title:
+        lines += [f"### {title}", ""]
+    lines += [
+        "| --weights | format | weight bytes | vs bf16 | quantized leaves |",
+        "|---|---|---|---|---|",
+    ]
+    for r in reports:
+        lines.append(
+            f"| {r['mode']} | {r['format']} | {r['total_serve_bytes']:,} "
+            f"| {r['ratio_vs_bf16']:.2f}x fewer "
+            f"| {r['quantized_leaves']}/{r['n_leaves']} |"
+        )
+    return "\n".join(lines)
