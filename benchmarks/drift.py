@@ -29,6 +29,11 @@ a small deterministic JSON-able dict:
   speedup must hold the >= 3x floor and the q4 weight-compression ratio
   the >= 3.5x floor.  Weight bytes are exact.
 
+* shampoo — the 4-bit Shampoo quality gap vs the fp32 Shampoo oracle on the
+  same bench LM (gated like quality), plus the structural
+  Kronecker-factor bytes on the GPT-2-M tree and their compression ratio,
+  floored at >= 4x (the ISSUE 10 acceptance criterion).
+
 ``compare()`` checks a freshly computed dict against the tracked baseline
 (``benchmarks/results/baseline.json``) within tolerances; the CI job
 (``scripts_check_drift.py``) fails on violations, catching quality/memory
@@ -66,6 +71,9 @@ COMMS_MIN_RATIO = 4.0
 SERVING_MIN_SPEEDUP = 3.0
 # q4 serving weights must keep at least this much compression vs bf16.
 SERVING_MIN_Q4_RATIO = 3.5
+# 4-bit Kronecker factors must cut preconditioner bytes at least this much
+# vs the fp32 Shampoo oracle (ISSUE 10 acceptance floor; structural).
+SHAMPOO_MIN_FACTOR_RATIO = 4.0
 
 
 def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
@@ -111,6 +119,39 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
     from benchmarks.serving import serving_stats
 
     serving = serving_stats()
+
+    # 4-bit Shampoo: quality gap vs the fp32 Shampoo oracle on the bench LM
+    # (deterministic: seeded data/init, round-to-nearest factors), plus the
+    # structural preconditioner-byte ratio on the GPT-2-M tree — the four
+    # Kronecker-factor trees (stats_l/stats_r/precond_l/precond_r) only.
+    rsh32 = train_small_lm(make_optimizer("shampoo32", 3e-3), steps=steps)
+    rsh4 = train_small_lm(make_optimizer("shampoo4bit", 3e-3), steps=steps)
+
+    def factor_bytes(name):
+        opt = make_optimizer(name, 3e-3)
+        state_s = jax.eval_shape(
+            lambda: opt.init(
+                jax.tree_util.tree_map(
+                    lambda s: jnp.zeros(s.shape, s.dtype), params_s
+                )
+            )
+        )
+        return sum(
+            state_nbytes(state_s[f])
+            for f in ("stats_l", "stats_r", "precond_l", "precond_r")
+        )
+
+    fb32 = factor_bytes("shampoo32")
+    fb4 = factor_bytes("shampoo4bit")
+    shampoo = {
+        "shampoo32_loss": round(rsh32["loss_final"], 6),
+        "shampoo4bit_loss": round(rsh4["loss_final"], 6),
+        "gap": round(rsh4["loss_final"] - rsh32["loss_final"], 6),
+        "shampoo4bit_unstable": bool(rsh4["unstable"]),
+        "fp32_factor_bytes": int(fb32),
+        "q4_factor_bytes": int(fb4),
+        "factor_ratio": round(fb32 / fb4, 6),
+    }
     return {
         "meta": {"steps": steps, "sr_seed": SR_SEED, "lr": 3e-3},
         "quality": {
@@ -144,6 +185,7 @@ def production_metrics(steps: int = DEFAULT_STEPS) -> Dict:
             "ratio_vs_fp32": wire["ratio_vs_fp32"],
         },
         "serving": serving,
+        "shampoo": shampoo,
     }
 
 
@@ -282,5 +324,37 @@ def compare(
             violations.append(
                 f"serving q4 weight compression {cur_sv['q4_ratio_vs_bf16']:.2f}x "
                 f"fell below the {SERVING_MIN_Q4_RATIO:.1f}x floor vs bf16"
+            )
+
+    # 4-bit Shampoo: the quality gap vs the fp32 oracle is gated like the
+    # production quality gap; factor bytes are structural (exact) and the
+    # compression ratio must hold the >= 4x acceptance floor.
+    base_sh = baseline.get("shampoo")
+    cur_sh = current.get("shampoo")
+    if base_sh and not cur_sh:
+        violations.append(
+            "shampoo metrics missing from the current run — the 4-bit "
+            "Shampoo gate did not execute (baseline still records it)"
+        )
+    elif base_sh and cur_sh:
+        if cur_sh["shampoo4bit_unstable"]:
+            violations.append("shampoo4bit run went unstable (nonfinite/blowup)")
+        if abs(cur_sh["gap"] - base_sh["gap"]) > loss_gap_tol:
+            violations.append(
+                "shampoo quality gap (shampoo4bit - shampoo32 final loss) "
+                f"drifted: {cur_sh['gap']:+.4f} vs baseline "
+                f"{base_sh['gap']:+.4f} (tol {loss_gap_tol})"
+            )
+        for key in ("fp32_factor_bytes", "q4_factor_bytes"):
+            if cur_sh[key] != base_sh[key]:
+                violations.append(
+                    f"shampoo.{key} changed: {cur_sh[key]} vs baseline "
+                    f"{base_sh[key]} — Kronecker-factor layout drift"
+                )
+        if cur_sh["factor_ratio"] < SHAMPOO_MIN_FACTOR_RATIO:
+            violations.append(
+                f"shampoo factor compression {cur_sh['factor_ratio']:.2f}x "
+                f"fell below the {SHAMPOO_MIN_FACTOR_RATIO:.0f}x floor for "
+                "4-bit Kronecker factors"
             )
     return violations

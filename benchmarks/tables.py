@@ -89,6 +89,8 @@ def tab2_optimizer_comparison() -> List[Tuple[str, float, str]]:
          0),
         ("4bit-Factor", make_optimizer("factor4bit", LR), None),
         ("production4bit-SR", make_optimizer("production4bit", LR), 0),
+        ("32bit-Shampoo", make_optimizer("shampoo32", LR), None),
+        ("4bit-Shampoo", make_optimizer("shampoo4bit", LR), None),
     ]
     rows = []
     base = None
@@ -137,6 +139,8 @@ def tab4_memory() -> List[Tuple[str, float, str]]:
         ("production4bit", make_optimizer("production4bit", LR)),
         ("Adafactor-b1=0", make_optimizer("adafactor", LR, b1=0.0)),
         ("SM3", make_optimizer("sm3", LR)),
+        ("32bit-Shampoo", make_optimizer("shampoo32", LR)),
+        ("4bit-Shampoo", make_optimizer("shampoo4bit", LR)),
     ]
     rows = []
     base = None

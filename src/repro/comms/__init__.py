@@ -14,13 +14,12 @@ from repro.comms.accounting import (
     mode_totals,
     wire_report,
 )
-from repro.comms.config import GRAD_COMM_MODES, CommsConfig, from_grad_dtype
+from repro.comms.config import GRAD_COMM_MODES, CommsConfig
 from repro.comms.reduce import grad_comm_key, quantized_all_reduce, reduce_grads
 
 __all__ = [
     "GRAD_COMM_MODES",
     "CommsConfig",
-    "from_grad_dtype",
     "grad_comm_key",
     "quantized_all_reduce",
     "reduce_grads",

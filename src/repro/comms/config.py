@@ -28,7 +28,7 @@ import jax.numpy as jnp
 
 from repro.core.quantizer import QuantConfig
 
-__all__ = ["GRAD_COMM_MODES", "CommsConfig", "from_grad_dtype"]
+__all__ = ["GRAD_COMM_MODES", "CommsConfig"]
 
 GRAD_COMM_MODES = ("fp32", "bf16", "int8", "int4")
 
@@ -53,6 +53,12 @@ class CommsConfig:
             raise ValueError(
                 f"unknown grad-comm mode {self.mode!r}; want one of {GRAD_COMM_MODES}"
             )
+        # Validate the mapping eagerly (with the registry's did-you-mean)
+        # even for non-quantized modes, so a typo'd config fails at
+        # construction rather than when someone later flips mode="int4".
+        from repro.core import mappings
+
+        mappings.get_spec(self.mapping)
 
     @classmethod
     def parse(cls, mode: str, **overrides) -> "CommsConfig":
@@ -97,22 +103,3 @@ class CommsConfig:
             return self.mode
         sr = "+SR" if self.stochastic_rounding else ""
         return f"{self.mode}/B{self.block_size}/{self.mapping.upper()}{sr}"
-
-
-def from_grad_dtype(grad_dtype) -> CommsConfig:
-    """Migrate the legacy ``grad_dtype`` argument to a ``CommsConfig``.
-
-    ``None``/fp32 -> the fp32 baseline; bf16 -> the ``bf16`` mode.  Anything
-    else was never a supported wire format and is rejected.
-    """
-    if grad_dtype is None:
-        return CommsConfig()
-    dt = jnp.dtype(grad_dtype)
-    if dt == jnp.dtype(jnp.bfloat16):
-        return CommsConfig(mode="bf16")
-    if dt == jnp.dtype(jnp.float32):
-        return CommsConfig()
-    raise ValueError(
-        f"grad_dtype={grad_dtype!r} has no CommsConfig equivalent; "
-        f"use CommsConfig(mode=...) with one of {GRAD_COMM_MODES}"
-    )

@@ -10,6 +10,7 @@ signature).
 
 from __future__ import annotations
 
+import difflib
 import inspect
 from typing import Callable, Dict, NamedTuple, Tuple
 
@@ -42,6 +43,12 @@ from repro.core.optimizers.presets import (
     production_labels,
 )
 from repro.core.optimizers.sgdm import sgdm, sgdm4bit
+from repro.core.optimizers.shampoo import (
+    FACTOR_4BIT,
+    shampoo_chain,
+    shampoo32,
+    shampoo4bit,
+)
 from repro.core.optimizers.sm3 import sm3
 from repro.core.optimizers.transform import (
     GradientTransformation,
@@ -54,6 +61,7 @@ from repro.core.optimizers.transform import (
     scale_by_adam,
     scale_by_factored_rms,
     scale_by_learning_rate,
+    scale_by_shampoo,
     scale_by_sm3,
     trace,
 )
@@ -95,6 +103,16 @@ OPTIMIZER_SPECS: Dict[str, OptimizerSpec] = {
         production4bit,
         "production preset: fp32 embed/head/norm/bias + 4-bit SR body",
     ),
+    "shampoo32": OptimizerSpec(
+        shampoo32,
+        "fp32 blocked Shampoo with AdamW grafting (parity oracle)",
+        shampoo_chain,
+    ),
+    "shampoo4bit": OptimizerSpec(
+        shampoo4bit,
+        "4-bit Shampoo: B128/Dyn Kronecker factors + 4-bit AdamW moments",
+        shampoo_chain,
+    ),
 }
 
 
@@ -111,8 +129,11 @@ def make_optimizer(name: str, lr, **overrides) -> Optimizer:
     """
     spec = OPTIMIZER_SPECS.get(name)
     if spec is None:
+        close = difflib.get_close_matches(str(name), OPTIMIZER_SPECS, n=1)
+        hint = f" — did you mean {close[0]!r}?" if close else ""
         raise ValueError(
             f"unknown optimizer {name!r}; available: {', '.join(OPTIMIZER_SPECS)}"
+            f"{hint}"
         )
     valid = set()
     fn = spec.factory
@@ -131,9 +152,15 @@ def make_optimizer(name: str, lr, **overrides) -> Optimizer:
         fn = next_fn if has_var_kw else None
     unknown = set(overrides) - valid
     if unknown:
+        hints = []
+        for k in sorted(unknown):
+            close = difflib.get_close_matches(k, valid, n=1)
+            if close:
+                hints.append(f"{k!r} -> did you mean {close[0]!r}?")
+        hint = (" " + "; ".join(hints)) if hints else ""
         raise ValueError(
             f"optimizer {name!r} does not accept override(s) "
-            f"{sorted(unknown)}; valid overrides: {sorted(valid)}"
+            f"{sorted(unknown)}; valid overrides: {sorted(valid)}.{hint}"
         )
     try:
         return spec.factory(lr, **overrides)
@@ -161,6 +188,7 @@ __all__ = [
     "trace",
     "scale_by_sm3",
     "scale_by_factored_rms",
+    "scale_by_shampoo",
     "add_decayed_weights",
     "scale_by_learning_rate",
     # paper-named constructors
@@ -176,6 +204,9 @@ __all__ = [
     "sm3",
     "sgdm",
     "sgdm4bit",
+    "shampoo_chain",
+    "shampoo32",
+    "shampoo4bit",
     # schedules
     "constant",
     "linear_warmup_linear_decay",
@@ -190,4 +221,5 @@ __all__ = [
     "V_4BIT",
     "M_8BIT",
     "V_8BIT",
+    "FACTOR_4BIT",
 ]

@@ -102,6 +102,10 @@ class QuantPolicy:
     - leaves with <= ``threshold`` elements stay fp32
     - leaves whose path matches any ``exclude`` regex stay fp32
       (used by the 8-bit baseline to skip embeddings)
+    - leaves with fewer than ``min_ndim`` dims stay fp32 (matrix-factor
+      state — Shampoo Kronecker blocks — only exists for matrix params;
+      their vector/scalar siblings hold empty placeholders that must not
+      be quantized)
     - second moment may additionally be *factored* for ndim >= 2
       (the 4-bit Factor optimizer).
     """
@@ -110,6 +114,7 @@ class QuantPolicy:
     threshold: int = 4096
     exclude: Tuple[str, ...] = ()
     factor_2d: bool = False  # second-moment factorization for ndim >= 2
+    min_ndim: int = 0  # param rank below which the state leaf stays raw
 
     def mode(self, path: str, shape: Tuple[int, ...]) -> str:
         """-> 'raw' | 'quant' | 'factor'."""
@@ -119,6 +124,8 @@ class QuantPolicy:
         if self.config is None and not self.factor_2d:
             return "raw"
         if size <= self.threshold:
+            return "raw"
+        if len(shape) < self.min_ndim:
             return "raw"
         for pat in self.exclude:
             if re.search(pat, path):

@@ -1,0 +1,122 @@
+"""Shampoo family as transformation chains (*4-bit Shampoo*, PAPERS.md).
+
+* fp32 Shampoo oracle — ``shampoo32(lr)``: blocked Kronecker preconditioners
+  (``scale_by_shampoo``) with AdamW grafting, nothing compressed.  The
+  trajectory-parity reference for the 4-bit variant.
+* 4-bit Shampoo       — ``shampoo4bit(lr)``: the SAME chain with the four
+  Kronecker factor trees (L/R statistics + their inverse roots) held as
+  4-bit ``QuantizedTensor``s through ``compressed()`` — blockwise B128 with
+  the symmetric ``dynamic`` map (factors carry signs both ways, so the
+  asymmetric DE map is wrong for them) — and the grafting moments on the
+  paper's 4-bit AdamW recipe (m B128/DE, v Rank-1/Linear).
+
+``compressed()`` treats the factor trees exactly like first-order moments:
+decompress -> ``scale_by_shampoo`` -> recompress is Alg. 1 verbatim, just
+over six state fields instead of two.  No kernel route is attached: the
+fused Pallas path computes a *whole* AdamW step and emits ``Replace``
+leaves, which would silently drop the preconditioning — the grafting
+moments intentionally keep the kernel-ELIGIBLE layout (B128 m + rank-1 v)
+so a future preconditioned kernel can take over without a state migration
+(tests/test_shampoo.py pins both facts).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.optimizers.adamw import M_4BIT, V_4BIT
+from repro.core.optimizers.base import Optimizer, QuantPolicy
+from repro.core.optimizers.transform import (
+    Schedule,
+    add_decayed_weights,
+    as_optimizer,
+    chain,
+    compressed,
+    scale_by_learning_rate,
+    scale_by_shampoo,
+)
+from repro.core.quantizer import QuantConfig
+
+__all__ = ["FACTOR_4BIT", "shampoo_chain", "shampoo32", "shampoo4bit"]
+
+# Kronecker-factor quantizer (4-bit Shampoo): blockwise absmax over the
+# stacked (nblocks, B, B) factor, symmetric signed `dynamic` map so negative
+# off-diagonal mass is representable at full range (DE has no -1.0).
+FACTOR_4BIT = QuantConfig(
+    bits=4, normalization="blockwise", block_size=128, mapping="dynamic", signed=True
+)
+
+
+def shampoo_chain(
+    lr: Schedule,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.01,
+    block_size: int = 128,
+    precond_every: int = 10,
+    matrix_eps: float = 1e-6,
+    floor_rel: float = 0.01,
+    m_policy: Optional[QuantPolicy] = None,
+    v_policy: Optional[QuantPolicy] = None,
+    factor_policy: Optional[QuantPolicy] = None,
+):
+    """The bare Shampoo transformation chain (no ``Optimizer`` facade).
+
+    ``factor_policy`` governs all four Kronecker factor trees; it is forced
+    to ``min_ndim=2`` because factors only exist for matrix params (vector
+    params hold empty placeholders that must stay raw).
+    """
+    m_policy = m_policy or QuantPolicy()
+    v_policy = v_policy or QuantPolicy()
+    factor_policy = dataclasses.replace(
+        factor_policy or QuantPolicy(), min_ndim=max(2, (factor_policy or QuantPolicy()).min_ndim)
+    )
+    return chain(
+        compressed(
+            scale_by_shampoo(
+                b1=b1,
+                b2=b2,
+                eps=eps,
+                block_size=block_size,
+                precond_every=precond_every,
+                matrix_eps=matrix_eps,
+                floor_rel=floor_rel,
+            ),
+            {
+                "m": m_policy,
+                "v": v_policy,
+                "stats_l": factor_policy,
+                "stats_r": factor_policy,
+                "precond_l": factor_policy,
+                "precond_r": factor_policy,
+            },
+        ),
+        add_decayed_weights(weight_decay),
+        scale_by_learning_rate(lr),
+    )
+
+
+def shampoo32(lr: Schedule, name: str = "shampoo32", **kw) -> Optimizer:
+    """fp32 blocked Shampoo with AdamW grafting — the parity oracle."""
+    return as_optimizer(shampoo_chain(lr, **kw), name=name)
+
+
+def shampoo4bit(lr: Schedule, stochastic_rounding: bool = False, **kw) -> Optimizer:
+    """4-bit Shampoo: 4-bit Kronecker factors + the paper's 4-bit moments."""
+    m_cfg, v_cfg, f_cfg = M_4BIT, V_4BIT, FACTOR_4BIT
+    if stochastic_rounding:
+        m_cfg = dataclasses.replace(m_cfg, stochastic_rounding=True)
+        v_cfg = dataclasses.replace(v_cfg, stochastic_rounding=True)
+        f_cfg = dataclasses.replace(f_cfg, stochastic_rounding=True)
+    return as_optimizer(
+        shampoo_chain(
+            lr,
+            m_policy=QuantPolicy(config=m_cfg),
+            v_policy=QuantPolicy(config=v_cfg),
+            factor_policy=QuantPolicy(config=f_cfg),
+            **kw,
+        ),
+        name="shampoo4bit",
+    )

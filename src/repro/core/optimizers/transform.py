@@ -66,6 +66,7 @@ from typing import Any, Callable, Dict, Mapping, NamedTuple, Optional, Tuple, Un
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.optimizers.base import (
     FactoredMoment,
@@ -94,6 +95,7 @@ __all__ = [
     "trace",
     "scale_by_sm3",
     "scale_by_factored_rms",
+    "scale_by_shampoo",
     "add_decayed_weights",
     "scale_by_learning_rate",
     "FusedAdamWRoute",
@@ -490,6 +492,222 @@ def scale_by_factored_rms(
         unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
         return unf(out), FactoredRmsState(
             count, unf(new_v), unf(new_m) if state.m is not None else None
+        )
+
+    return GradientTransformation(init, update)
+
+
+class ScaleByShampooState(NamedTuple):
+    count: jnp.ndarray
+    m: PyTree  # grafting first moment (Adam m)
+    v: PyTree  # grafting second moment (Adam v)
+    stats_l: PyTree  # (nblocks, Br, Br) left Kronecker statistics L += G Gᵀ
+    stats_r: PyTree  # (nblocks, Bc, Bc) right Kronecker statistics R += Gᵀ G
+    precond_l: PyTree  # (nblocks, Br, Br) L^{-1/4}
+    precond_r: PyTree  # (nblocks, Bc, Bc) R^{-1/4}
+
+
+def _shampoo_geometry(shape: Tuple[int, ...], block_size: int):
+    """Static blocking of a >=2-d param: leading dims merge into rows, the
+    trailing dim is columns; each dim tiles at min(block_size, dim)."""
+    n = 1
+    for d in shape[:-1]:
+        n *= int(d)
+    m = int(shape[-1])
+    br = min(block_size, n)
+    bc = min(block_size, m)
+    nb_r = -(-n // br)
+    nb_c = -(-m // bc)
+    return n, m, br, bc, nb_r, nb_c
+
+
+def _shampoo_to_blocks(x2d, n, m, br, bc, nb_r, nb_c):
+    x = jnp.pad(x2d, ((0, nb_r * br - n), (0, nb_c * bc - m)))
+    x = x.reshape(nb_r, br, nb_c, bc).transpose(0, 2, 1, 3)
+    return x.reshape(nb_r * nb_c, br, bc)
+
+
+def _shampoo_from_blocks(bx, n, m, br, bc, nb_r, nb_c):
+    x = bx.reshape(nb_r, nb_c, br, bc).transpose(0, 2, 1, 3)
+    return x.reshape(nb_r * br, nb_c * bc)[:n, :m]
+
+
+def _shampoo_pad_diag(n, m, br, bc, nb_r, nb_c):
+    """Per-block diagonal indicators of PADDED rows/cols (static fp32 masks).
+
+    Padded dims get +1.0 on the statistics diagonal before the inverse root
+    so their eigenvalues sit at ~1.0 (inert: the root maps them to ~1.0)
+    instead of at the ridge eps, whose eps^{-1/4} would both poison the
+    blockwise absmax scales of quantized preconditioner factors and be
+    multiplied only by zero-padded gradient entries anyway.
+    """
+    rows = np.arange(nb_r * br).reshape(nb_r, br) >= n
+    cols = np.arange(nb_c * bc).reshape(nb_c, bc) >= m
+    pad_l = np.repeat(rows, nb_c, axis=0).astype(np.float32)  # (nb, br)
+    pad_r = np.tile(cols, (nb_r, 1)).astype(np.float32)  # (nb, bc)
+    return jnp.asarray(pad_l), jnp.asarray(pad_r)
+
+
+def _inv_quarter_root(stats, pad_diag, ridge, floor_rel):
+    """(stats + ridge*I + diag(pad))^{-1/4} per block, via batched eigh.
+
+    Eigenvalues are floored at ``max(ridge, floor_rel * λ_max)`` per block.
+    The RELATIVE floor is load-bearing for quantized factors: 4-bit
+    requantization noise on the statistics manufactures spurious near-zero
+    (even negative) eigenvalues, and an absolute floor lets their ^{-1/4}
+    amplification (~ridge^{-1/4}) dominate the direction with pure noise as
+    gradients shrink.  Flooring relative to the block's top eigenvalue caps
+    the amplification ratio at ``floor_rel^{-1/4}`` no matter the scale —
+    the same trick production Shampoo implementations use for their
+    ``matrix_epsilon``.
+    """
+    d = stats.shape[-1]
+    eye = jnp.eye(d, dtype=jnp.float32)
+    a = stats + ridge * eye + pad_diag[:, :, None] * eye
+    w, u = jnp.linalg.eigh(a)
+    wmax = jnp.max(w, axis=-1, keepdims=True)
+    w = jnp.maximum(w, jnp.maximum(ridge, floor_rel * wmax))
+    return jnp.einsum("kij,kj,klj->kil", u, w**-0.25, u)
+
+
+def scale_by_shampoo(
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    *,
+    block_size: int = 128,
+    precond_every: int = 10,
+    matrix_eps: float = 1e-6,
+    floor_rel: float = 0.01,
+) -> GradientTransformation:
+    """Blocked Shampoo (Gupta et al. 2018, the block-diagonal variant of
+    Anil et al. 2020) with AdamW-shaped grafting, as a pure rule.
+
+    Each >=2-d param is matricized (leading dims -> rows) and tiled into
+    blocks of at most ``block_size`` per side.  Per block::
+
+        L <- b2 L + (1-b2) G Gᵀ        R <- b2 R + (1-b2) Gᵀ G
+        every precond_every steps:  P_L = L̂^{-1/4},  P_R = R̂^{-1/4}   (eigh)
+        direction  D = P_L m̂ P_R       (m̂ = bias-corrected momentum)
+
+    The emitted update grafts D onto the AdamW direction's norm
+    (``D * ||adam_dir|| / ||D||`` per leaf), so the step SIZE schedule is
+    exactly AdamW's while the step DIRECTION is second-order — the standard
+    trick that lets Shampoo reuse first-order lr tuning, and what makes the
+    downstream chain (weight decay + lr) AdamW-shaped.  Params with ndim < 2
+    fall back to the AdamW direction and hold empty ``(0,)`` factor
+    placeholders.
+
+    All four factor trees (``stats_l/stats_r/precond_l/precond_r``) mirror
+    the param tree one array per leaf, so ``compressed()`` can hold them as
+    4-bit ``QuantizedTensor``s like any first-order moment (*4-bit Shampoo*).
+    Inverse roots are recomputed every ``precond_every`` steps under
+    ``lax.cond``; between recomputes the stale ``P`` is reused.
+    ``floor_rel`` floors each block's eigenvalues relative to its largest
+    before the inverse root — see ``_inv_quarter_root`` for why this is
+    essential once the factors are quantized.
+    """
+
+    def _placeholder():
+        return jnp.zeros((0,), jnp.float32)
+
+    def init(params):
+        zeros = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params
+        )
+
+        def factor(p, side, identity):
+            if p.ndim < 2:
+                return _placeholder()
+            n, m, br, bc, nb_r, nb_c = _shampoo_geometry(p.shape, block_size)
+            d = br if side == "l" else bc
+            nb = nb_r * nb_c
+            base = jnp.zeros((nb, d, d), jnp.float32)
+            return base + jnp.eye(d, dtype=jnp.float32) if identity else base
+
+        f = lambda side, identity: jax.tree_util.tree_map(
+            lambda p: factor(p, side, identity), params
+        )
+        return ScaleByShampooState(
+            jnp.zeros((), jnp.int32),
+            zeros(),
+            zeros(),
+            f("l", False),
+            f("r", False),
+            f("l", True),
+            f("r", True),
+        )
+
+    def update(updates, state, params=None, *, key=None):
+        del params, key
+        count = state.count + 1
+        cf = count.astype(jnp.float32)
+        bc1 = 1.0 - jnp.power(jnp.float32(b1), cf)
+        bc2 = 1.0 - jnp.power(jnp.float32(b2), cf)
+        # Recompute on step 1 (so the first update is already preconditioned
+        # by the first gradient's statistics) and every precond_every after.
+        recompute = ((count - 1) % precond_every) == 0
+
+        leaves_g, treedef = jax.tree_util.tree_flatten(updates)
+        fields = {
+            name: treedef.flatten_up_to(getattr(state, name))
+            for name in ("m", "v", "stats_l", "stats_r", "precond_l", "precond_r")
+        }
+
+        out = []
+        new = {name: [] for name in fields}
+        for i, g in enumerate(leaves_g):
+            g = g.astype(jnp.float32)
+            m, v = fields["m"][i], fields["v"][i]
+            sl, sr = fields["stats_l"][i], fields["stats_r"][i]
+            pl, pr = fields["precond_l"][i], fields["precond_r"][i]
+
+            m2 = b1 * m + (1.0 - b1) * g
+            v2 = b2 * v + (1.0 - b2) * g * g
+            adam_dir = (m2 / bc1) / (jnp.sqrt(v2 / bc2) + eps)
+            new["m"].append(m2)
+            new["v"].append(v2)
+
+            if g.ndim < 2:
+                out.append(adam_dir)
+                for name in ("stats_l", "stats_r", "precond_l", "precond_r"):
+                    new[name].append(fields[name][i])
+                continue
+
+            geo = _shampoo_geometry(g.shape, block_size)
+            n, mm = geo[0], geo[1]
+            pad_l, pad_r = _shampoo_pad_diag(*geo)
+            gb = _shampoo_to_blocks(g.reshape(n, mm), *geo)
+            sl2 = b2 * sl + (1.0 - b2) * jnp.einsum("kij,klj->kil", gb, gb)
+            sr2 = b2 * sr + (1.0 - b2) * jnp.einsum("kji,kjl->kil", gb, gb)
+            pl2 = jax.lax.cond(
+                recompute,
+                lambda s, old: _inv_quarter_root(s / bc2, pad_l, matrix_eps, floor_rel),
+                lambda s, old: old,
+                sl2,
+                pl,
+            )
+            pr2 = jax.lax.cond(
+                recompute,
+                lambda s, old: _inv_quarter_root(s / bc2, pad_r, matrix_eps, floor_rel),
+                lambda s, old: old,
+                sr2,
+                pr,
+            )
+            mb = _shampoo_to_blocks((m2 / bc1).reshape(n, mm), *geo)
+            db = jnp.einsum("kij,kjl,klo->kio", pl2, mb, pr2)
+            d = _shampoo_from_blocks(db, *geo).reshape(g.shape)
+            a_norm = jnp.sqrt(jnp.sum(adam_dir * adam_dir))
+            d_norm = jnp.sqrt(jnp.sum(d * d))
+            out.append(d * (a_norm / (d_norm + 1e-30)))
+            new["stats_l"].append(sl2)
+            new["stats_r"].append(sr2)
+            new["precond_l"].append(pl2)
+            new["precond_r"].append(pr2)
+
+        unf = lambda ls: jax.tree_util.tree_unflatten(treedef, ls)
+        return unf(out), ScaleByShampooState(
+            count, *(unf(new[name]) for name in ScaleByShampooState._fields[1:])
         )
 
     return GradientTransformation(init, update)

@@ -35,15 +35,23 @@ __all__ = [
 
 @dataclasses.dataclass(frozen=True)
 class QuantConfig:
-    """Static description of a quantizer (hashable; safe as pytree aux data)."""
+    """Static description of a quantizer (hashable; safe as pytree aux data).
+
+    ``mapping`` must name a map in the ``repro.core.mappings`` registry
+    (``mappings.registered()``); unknown names fail here, at construction,
+    with a did-you-mean — not later inside a traced update.
+    """
 
     bits: int = 4
     normalization: str = "blockwise"  # pertensor | blockwise | rank1
     block_size: int = 128
-    mapping: str = "de"  # linear | de | de0
+    mapping: str = "de"  # any name in mappings.registered()
     signed: bool = True
     stochastic_rounding: bool = False
     threshold: int = 4096
+
+    def __post_init__(self):
+        mappings.get_spec(self.mapping)  # raises listing mappings.registered()
 
     @property
     def name(self) -> str:
@@ -52,7 +60,7 @@ class QuantConfig:
             "blockwise": f"B{self.block_size}",
             "rank1": "Rank-1",
         }[self.normalization]
-        mp = {"linear": "Linear", "de": "DE", "de0": "DE-0"}[self.mapping]
+        mp = mappings.get_spec(self.mapping).display
         sr = "+SR" if self.stochastic_rounding else ""
         return f"{norm}/{mp}{sr}@{self.bits}bit"
 

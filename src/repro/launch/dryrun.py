@@ -108,12 +108,8 @@ def lower_cell(arch: str, shape_name: str, mesh_kind: str, opt_name: str = "adam
         )
         from repro.comms import CommsConfig
         # REPRO_GRAD_COMM selects the gradient-collective wire format
-        # (fp32/bf16/int8/int4); REPRO_GRAD_BF16 is the legacy spelling of
-        # bf16 and still honoured.
-        comm_mode = os.environ.get(
-            "REPRO_GRAD_COMM",
-            "bf16" if os.environ.get("REPRO_GRAD_BF16") else "fp32",
-        )
+        # (fp32/bf16/int8/int4).
+        comm_mode = os.environ.get("REPRO_GRAD_COMM", "fp32")
         step_fn = build_train_step(cfg, opt, mesh, axes, zero=True,
                                    accum_steps=accum_steps,
                                    comms=CommsConfig.parse(comm_mode))

@@ -72,12 +72,24 @@ def _sanitize_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
 
 
 def _state_leaf_shardings(param, axes, leaf, mesh: Mesh, zero: bool):
-    """Sharding subtree for one optimizer-state leaf."""
+    """Sharding subtree for one optimizer-state leaf.
+
+    A leaf whose logical shape matches the param's is a *moment* and follows
+    the param's TP spec (+ ZeRO).  A leaf with a different shape is a
+    *matrix-factor* stack (Shampoo's blocked Kronecker statistics /
+    preconditioners, shape ``(nblocks, B, B)``): it has no TP layout of its
+    own, so it carries no base spec and is ZeRO-sharded over its largest
+    divisible dim — factor state is by far the heaviest part of a Shampoo
+    tree, and leaving it replicated would forfeit the ZeRO win exactly where
+    it matters most.  Empty placeholders (vector params' ``(0,)`` factor
+    slots) stay replicated.
+    """
     p_spec = spec_for(tuple(param.shape), axes, mesh)
+    mirrors = tuple(getattr(leaf, "shape", ())) == tuple(param.shape)
 
     if isinstance(leaf, QuantizedTensor):
         codes_shape = tuple(leaf.codes.shape)
-        codes_spec = _sanitize_spec(p_spec, codes_shape, mesh)
+        codes_spec = _sanitize_spec(p_spec if mirrors else P(), codes_shape, mesh)
         if zero:
             codes = _zero_spec(codes_shape, codes_spec, mesh)
         else:
@@ -91,9 +103,11 @@ def _state_leaf_shardings(param, axes, leaf, mesh: Mesh, zero: bool):
         return QuantizedTensor(codes, tuple(scale_shardings), leaf.shape, leaf.config)
     if isinstance(leaf, FactoredMoment):
         return FactoredMoment(replicated(mesh), replicated(mesh), leaf.shape)
-    # raw fp32 moment: param spec + ZeRO
+    if not mirrors and (leaf.size == 0 or not zero):
+        return replicated(mesh)
+    # raw fp32 moment (param spec + ZeRO) or factor stack (ZeRO only)
     if zero:
-        return _zero_spec(tuple(leaf.shape), p_spec, mesh)
+        return _zero_spec(tuple(leaf.shape), p_spec if mirrors else P(), mesh)
     return NamedSharding(mesh, p_spec)
 
 
@@ -121,6 +135,10 @@ def opt_state_shardings(opt_state, params, axes, mesh: Mesh, zero: bool = True):
         ``MaskedNode`` leaves (partitioned states: positions owned by another
         partition) count as mirroring — they flatten to nothing, so the
         sharding tree just carries a matching ``MaskedNode`` placeholder.
+        Leaf shapes need NOT match the param's: a mismatched array (or
+        ``QuantizedTensor``) at a param position is a matrix-factor leaf
+        (Shampoo Kronecker blocks) and gets factor sharding in
+        ``_state_leaf_shardings``.
         """
         try:
             s_leaves = treedef.flatten_up_to(sub)
@@ -128,17 +146,12 @@ def opt_state_shardings(opt_state, params, axes, mesh: Mesh, zero: bool = True):
             return None
         if len(s_leaves) != len(p_leaves):
             return None
-        for p, s in zip(p_leaves, s_leaves):
-            if isinstance(s, MaskedNode):
+        for s in s_leaves:
+            if isinstance(s, (MaskedNode, QuantizedTensor, FactoredMoment)):
                 continue
-            if isinstance(s, (QuantizedTensor, FactoredMoment)):
-                if tuple(s.shape) != tuple(p.shape):
-                    return None
-            elif hasattr(s, "shape") and not isinstance(s, (dict, list, tuple)):
-                if tuple(s.shape) != tuple(p.shape):
-                    return None
-            else:
-                return None
+            if hasattr(s, "shape") and not isinstance(s, (dict, list, tuple)):
+                continue
+            return None
         return s_leaves
 
     def walk(sub):

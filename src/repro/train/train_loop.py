@@ -15,14 +15,13 @@ Distribution model (DESIGN.md §5):
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh
 
-from repro.comms import CommsConfig, from_grad_dtype, grad_comm_key, reduce_grads
+from repro.comms import CommsConfig, grad_comm_key, reduce_grads
 from repro.core.optimizers.base import Optimizer
 from repro.core.optimizers.transform import GradientTransformation, as_optimizer
 from repro.models import ModelConfig, loss_fn
@@ -102,7 +101,6 @@ def build_train_step(
     zero: bool = True,
     accum_steps: int = 1,
     comms: Optional[CommsConfig] = None,
-    grad_dtype=None,
 ) -> Callable:
     """Returns train_step(state, batch) -> (state, metrics).
 
@@ -115,23 +113,10 @@ def build_train_step(
 
     ``comms`` selects the gradient-collective wire format (``repro.comms``):
     fp32 (default), bf16 cast, or int8/int4 block-quantized transport with
-    SR keyed off the same checkpointed key stream.  ``grad_dtype`` is the
-    deprecated spelling of ``CommsConfig(mode="bf16")``.
+    SR keyed off the same checkpointed key stream.  It is the only
+    wire-format knob (the pre-PR-6 ``grad_dtype=`` spelling is gone).
     """
     optimizer = _coerce_optimizer(optimizer)
-    if grad_dtype is not None:
-        if comms is not None:
-            raise ValueError(
-                "pass either comms=CommsConfig(...) or the deprecated "
-                "grad_dtype, not both"
-            )
-        warnings.warn(
-            "grad_dtype is deprecated; use comms=CommsConfig(mode='bf16') "
-            "(the --grad-comm knob) — see docs/comms.md",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        comms = from_grad_dtype(grad_dtype)
     comms = comms if comms is not None else CommsConfig()
 
     def compute_grads(params, batch):

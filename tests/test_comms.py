@@ -33,7 +33,6 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.comms import (
     CommsConfig,
     format_wire_table,
-    from_grad_dtype,
     grad_comm_key,
     leaf_wire_bytes,
     mode_totals,
@@ -85,23 +84,27 @@ def test_commsconfig_parse_and_properties():
         CommsConfig(mode="int2")
 
 
-def test_from_grad_dtype_migration():
-    assert from_grad_dtype(None).mode == "fp32"
-    assert from_grad_dtype(jnp.float32).mode == "fp32"
-    assert from_grad_dtype(jnp.bfloat16).mode == "bf16"
-    with pytest.raises(ValueError, match="no CommsConfig equivalent"):
-        from_grad_dtype(jnp.float16)
+def test_commsconfig_validates_mapping():
+    # The mapping registry is the gatekeeper even for transport configs —
+    # typos fail at construction, listing the registered maps.
+    from repro.core import mappings
+
+    with pytest.raises(ValueError, match="registered mappings"):
+        CommsConfig(mode="int4", mapping="ed")
+    for name in mappings.registered():
+        assert CommsConfig(mode="int4", mapping=name).quant_config().mapping == name
 
 
-def test_build_train_step_grad_dtype_deprecated():
+def test_grad_dtype_knob_is_gone():
+    # PR 6's deprecation path is finished: CommsConfig is the ONLY
+    # wire-format knob, and the legacy kwarg fails loudly.
     cfg = _MICRO_CFG
     opt = make_optimizer("adamw32", 1e-3)
-    with pytest.warns(DeprecationWarning, match="grad_dtype is deprecated"):
+    with pytest.raises(TypeError):
         build_train_step(cfg, opt, grad_dtype=jnp.bfloat16)
-    with pytest.raises(ValueError, match="not both"):
-        build_train_step(
-            cfg, opt, comms=CommsConfig(mode="bf16"), grad_dtype=jnp.bfloat16
-        )
+    import repro.comms as comms_mod
+
+    assert not hasattr(comms_mod, "from_grad_dtype")
 
 
 # ---------------------------------------------------------------------------

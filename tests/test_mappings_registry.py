@@ -1,0 +1,183 @@
+"""Mapping-registry contract (ISSUE 10).
+
+Every map reaches ``QuantConfig`` through ``mappings.register_mapping`` —
+including the paper's three.  These tests pin:
+
+* the table contract for EVERY registered map (sorted, unique, finite,
+  length <= 2^bits, encode/decode round-trips bit-exactly, odd symmetry
+  when the spec declares it),
+* bit-identical ``linear``/``de``/``de0`` tables pre/post the registry
+  refactor (frozen 4-bit golden values),
+* construction-time validation with did-you-mean for ``QuantConfig`` and
+  ``make_optimizer`` overrides,
+* registration hygiene (duplicate rejection; registered maps usable
+  end-to-end through ``quantize``/``dequantize``).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import mappings
+from repro.core.quantizer import QuantConfig, dequantize, quantize
+
+jax.config.update("jax_platform_name", "cpu")
+
+LEGACY = ("linear", "de", "de0")
+NEW = ("dynamic", "quantile", "log-ema")
+
+
+# ---------------------------------------------------------------------------
+# registry surface
+# ---------------------------------------------------------------------------
+
+
+def test_legacy_and_new_maps_registered():
+    names = mappings.registered()
+    for n in LEGACY + NEW:
+        assert n in names, n
+
+
+def test_duplicate_registration_rejected():
+    with pytest.raises(ValueError, match="already registered"):
+        mappings.register_mapping("de", lambda bits, signed: np.array([0.5]))
+
+
+def test_unknown_mapping_lists_registry_and_suggests():
+    with pytest.raises(ValueError) as e:
+        mappings.get_spec("dynamik")
+    msg = str(e.value)
+    for n in mappings.registered():
+        assert n in msg  # the error lists mappings.registered()
+    assert "did you mean 'dynamic'" in msg
+
+
+def test_quantconfig_validates_mapping_at_construction():
+    with pytest.raises(ValueError, match="registered mappings"):
+        QuantConfig(mapping="liner")
+    with pytest.raises(ValueError, match="did you mean 'linear'"):
+        QuantConfig(mapping="liner")
+    # every registered map constructs, displays, and tables
+    for name in mappings.registered():
+        cfg = QuantConfig(mapping=name)
+        assert mappings.get_spec(name).display in cfg.name
+        assert cfg.table().shape[0] <= 2**cfg.bits
+
+
+def test_make_optimizer_did_you_mean():
+    from repro.core.optimizers import make_optimizer
+
+    with pytest.raises(ValueError, match="did you mean 'shampoo4bit'"):
+        make_optimizer("shampoo4bits", 1e-3)
+    with pytest.raises(ValueError, match="did you mean 'precond_every'"):
+        make_optimizer("shampoo4bit", 1e-3, precond_evry=5)
+    with pytest.raises(ValueError, match="did you mean 'weight_decay'"):
+        make_optimizer("adamw4bit", 1e-3, weight_dekay=0.1)
+
+
+# ---------------------------------------------------------------------------
+# the table contract, for every registered map
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", mappings.registered())
+@pytest.mark.parametrize("bits", [2, 4, 8])
+@pytest.mark.parametrize("signed", [True, False])
+def test_table_contract(kind, bits, signed):
+    t = np.asarray(mappings.mapping_table(kind, bits, signed))
+    assert t.ndim == 1 and 1 <= t.size <= 2**bits
+    assert np.all(np.isfinite(t))
+    assert np.all(np.diff(t) > 0)  # sorted AND unique
+    assert t.dtype == np.float32
+    lo = -1.0 if signed else 0.0
+    assert t.min() >= lo and t.max() <= 1.0
+
+
+@pytest.mark.parametrize("kind", mappings.registered())
+@pytest.mark.parametrize("signed", [True, False])
+def test_symmetry_matches_declaration(kind, signed):
+    spec = mappings.get_spec(kind)
+    t = np.asarray(mappings.mapping_table(kind, 4, True))
+    if spec.symmetric_signed:
+        np.testing.assert_array_equal(t, -t[::-1])
+    else:
+        assert not np.array_equal(t, -t[::-1])  # de/de0: +1.0 has no twin
+
+
+@pytest.mark.parametrize("kind", mappings.registered())
+@pytest.mark.parametrize("bits", [4, 8])
+@pytest.mark.parametrize("signed", [True, False])
+def test_encode_decode_roundtrip_bitexact(kind, bits, signed):
+    # decoding every code then re-encoding must reproduce the codes exactly
+    t = mappings.mapping_table(kind, bits, signed)
+    codes = jnp.arange(t.shape[0], dtype=jnp.uint8)
+    vals = mappings.decode(codes, t)
+    np.testing.assert_array_equal(np.asarray(mappings.encode(vals, t)), np.asarray(codes))
+
+
+# ---------------------------------------------------------------------------
+# frozen pre-refactor goldens: the registry refactor must not move a bit
+# ---------------------------------------------------------------------------
+
+GOLDEN_4BIT = {
+    ("linear", True): [-1.0, -0.875, -0.75, -0.625, -0.5, -0.375, -0.25, -0.125, 0.125, 0.25, 0.375, 0.5, 0.625, 0.75, 0.875, 1.0],
+    ("linear", False): [0.0625, 0.125, 0.1875, 0.25, 0.3125, 0.375, 0.4375, 0.5, 0.5625, 0.625, 0.6875, 0.75, 0.8125, 0.875, 0.9375, 1.0],
+    ("de", True): [-0.887499988079071, -0.6625000238418579, -0.4375, -0.21250000596046448, -0.07750000059604645, -0.032499998807907104, -0.005499999970197678, 0.0, 0.005499999970197678, 0.032499998807907104, 0.07750000059604645, 0.21250000596046448, 0.4375, 0.6625000238418579, 0.887499988079071, 1.0],
+    ("de", False): [0.0, 0.0032500000670552254, 0.00774999987334013, 0.021250000223517418, 0.04374999925494194, 0.06624999642372131, 0.08874999731779099, 0.15625, 0.26875001192092896, 0.3812499940395355, 0.4937500059604645, 0.606249988079071, 0.71875, 0.831250011920929, 0.9437500238418579, 1.0],
+    ("de0", True): [-0.887499988079071, -0.6625000238418579, -0.4375, -0.21250000596046448, -0.07750000059604645, -0.032499998807907104, -0.005499999970197678, 0.005499999970197678, 0.032499998807907104, 0.07750000059604645, 0.21250000596046448, 0.4375, 0.6625000238418579, 0.887499988079071, 1.0],
+    ("de0", False): [0.0032500000670552254, 0.00774999987334013, 0.021250000223517418, 0.04374999925494194, 0.06624999642372131, 0.08874999731779099, 0.15625, 0.26875001192092896, 0.3812499940395355, 0.4937500059604645, 0.606249988079071, 0.71875, 0.831250011920929, 0.9437500238418579, 1.0],
+}
+
+
+@pytest.mark.parametrize("kind,signed", sorted(GOLDEN_4BIT, key=str))
+def test_legacy_tables_bit_identical_post_refactor(kind, signed):
+    t = np.asarray(mappings.mapping_table(kind, 4, signed))
+    golden = np.array(GOLDEN_4BIT[(kind, signed)], np.float32)
+    np.testing.assert_array_equal(t, golden)
+
+
+# ---------------------------------------------------------------------------
+# map-specific properties the docs table advertises
+# ---------------------------------------------------------------------------
+
+
+def test_dynamic_signed_symmetric_with_unit_endpoints():
+    t = np.asarray(mappings.mapping_table("dynamic", 4, True))
+    assert -1.0 in t and 1.0 in t and 0.0 in t
+    # de's asymmetry (the motivating defect for factors) — pinned here
+    de = np.asarray(mappings.mapping_table("de", 4, True))
+    assert 1.0 in de and -1.0 not in de
+
+
+def test_quantile_and_log_ema_unsigned_exclude_zero():
+    for kind in ("quantile", "log-ema"):
+        t = np.asarray(mappings.mapping_table(kind, 4, False))
+        assert t.min() > 0.0, kind  # zero-excluding, like the linear baseline
+        assert t.max() == 1.0, kind
+
+
+def test_log_ema_is_geometric():
+    t = np.asarray(mappings.mapping_table("log-ema", 4, False), np.float64)
+    ratios = t[1:] / t[:-1]
+    np.testing.assert_allclose(ratios, ratios[0], rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# third-party registration flows end-to-end into quantize/dequantize
+# ---------------------------------------------------------------------------
+
+
+def test_registered_map_flows_through_quantize():
+    name = "test-halves"
+    if name not in mappings.registered():  # survive pytest re-imports
+        mappings.register_mapping(
+            name,
+            lambda bits, signed: (np.arange(2**bits, dtype=np.float64) + 1) / 2**bits,
+            display="Halves",
+        )
+    cfg = QuantConfig(bits=4, normalization="pertensor", mapping=name, signed=False)
+    x = jnp.abs(jax.random.normal(jax.random.PRNGKey(0), (64,)))
+    xq = dequantize(quantize(x, cfg))
+    assert xq.shape == x.shape and bool(jnp.all(jnp.isfinite(xq)))
+    assert float(jnp.max(jnp.abs(xq - x))) <= float(jnp.max(jnp.abs(x))) * 0.5

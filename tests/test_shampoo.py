@@ -1,0 +1,241 @@
+"""4-bit Shampoo (ISSUE 10): exact math, parity vs the fp32 oracle, state
+representation, factor-memory ratio, and the kernel-route contract.
+
+``shampoo32`` is the trajectory-parity oracle; ``shampoo4bit`` is the same
+chain with the four Kronecker-factor trees held as 4-bit B128/Dyn
+``QuantizedTensor``s and the grafting moments on the paper's 4-bit AdamW
+recipe.  Parity is convergence-style (like the AdamW 4-bit tests): the
+zero-excluding linear v-map damps the earliest steps identically across the
+whole 4-bit family, so per-step closeness is not the contract — reaching the
+optimum is.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.optimizers import (
+    FACTOR_4BIT,
+    adamw32,
+    make_optimizer,
+    optimizer_names,
+    scale_by_shampoo,
+    shampoo32,
+    shampoo4bit,
+    state_nbytes,
+)
+from repro.core.optimizers.transform import FusedAdamWRoute, Replace
+from repro.core.quantizer import QuantizedTensor
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _params(shape=(16, 512), seed=0):
+    rng = np.random.default_rng(seed)
+    return {"w": jnp.asarray(rng.normal(size=shape).astype(np.float32) * 0.1)}
+
+
+def _quadratic_loss(params, target):
+    return 0.5 * jnp.sum((params["w"] - target) ** 2)
+
+
+def _run_steps(opt, params, target, steps):
+    state = opt.init(params)
+    upd = jax.jit(opt.update)
+    losses = []
+    for _ in range(steps):
+        loss, grads = jax.value_and_grad(_quadratic_loss)(params, target)
+        params, state = upd(grads, state, params)
+        losses.append(float(loss))
+    return params, state, losses
+
+
+# ---------------------------------------------------------------------------
+# exact math: one single-block leaf vs a numpy hand reference
+# ---------------------------------------------------------------------------
+
+
+def test_scale_by_shampoo_matches_hand_reference():
+    b1, b2, eps, ridge, floor_rel = 0.9, 0.999, 1e-8, 1e-6, 0.01
+    rng = np.random.default_rng(7)
+    g_all = [rng.normal(size=(8, 8)).astype(np.float64) for _ in range(3)]
+
+    # numpy reference: one 8x8 block, recompute every step
+    m = np.zeros((8, 8))
+    v = np.zeros((8, 8))
+    sl = np.zeros((8, 8))
+    sr = np.zeros((8, 8))
+
+    def inv_quarter_root(s):
+        w, u = np.linalg.eigh(s + ridge * np.eye(8))
+        w = np.maximum(w, np.maximum(ridge, floor_rel * w.max()))
+        return (u * w**-0.25) @ u.T
+
+    refs = []
+    for t, g in enumerate(g_all, start=1):
+        bc1, bc2 = 1 - b1**t, 1 - b2**t
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        adam_dir = (m / bc1) / (np.sqrt(v / bc2) + eps)
+        sl = b2 * sl + (1 - b2) * g @ g.T
+        sr = b2 * sr + (1 - b2) * g.T @ g
+        pl, pr = inv_quarter_root(sl / bc2), inv_quarter_root(sr / bc2)
+        d = pl @ (m / bc1) @ pr
+        refs.append(d * np.linalg.norm(adam_dir) / (np.linalg.norm(d) + 1e-30))
+
+    tx = scale_by_shampoo(b1=b1, b2=b2, eps=eps, block_size=8, precond_every=1,
+                          matrix_eps=ridge, floor_rel=floor_rel)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    state = tx.init(params)
+    for g, ref in zip(g_all, refs):
+        u, state = tx.update({"w": jnp.asarray(g, jnp.float32)}, state, params)
+        np.testing.assert_allclose(np.asarray(u["w"]), ref, rtol=2e-3, atol=2e-5)
+
+
+def test_precond_recomputed_on_schedule():
+    tx = scale_by_shampoo(block_size=8, precond_every=3)
+    params = {"w": jnp.zeros((8, 8), jnp.float32)}
+    state = tx.init(params)
+    rng = np.random.default_rng(0)
+    changed = []
+    for _ in range(5):
+        g = {"w": jnp.asarray(rng.normal(size=(8, 8)), jnp.float32)}
+        prev = np.asarray(state.precond_l["w"])
+        _, state = tx.update(g, state, params)
+        changed.append(not np.array_equal(np.asarray(state.precond_l["w"]), prev))
+    # recompute when (count-1) % 3 == 0 -> counts 1 and 4
+    assert changed == [True, False, False, True, False]
+    # stats keep accumulating every step regardless
+    assert float(jnp.sum(jnp.abs(state.stats_l["w"]))) > 0.0
+
+
+def test_vector_params_fall_back_to_adam_direction():
+    b1, b2, eps = 0.9, 0.999, 1e-8
+    tx = scale_by_shampoo(b1=b1, b2=b2, eps=eps)
+    params = {"b": jnp.zeros((32,), jnp.float32)}
+    state = tx.init(params)
+    assert state.stats_l["b"].shape == (0,)  # empty placeholder, not a factor
+    g = {"b": jnp.asarray(np.random.default_rng(1).normal(size=(32,)), jnp.float32)}
+    u, state = tx.update(g, state, params)
+    mh = np.asarray(g["b"])  # t=1: m/bc1 == g, v/bc2 == g^2
+    np.testing.assert_allclose(
+        np.asarray(u["b"]), mh / (np.abs(mh) + eps), rtol=1e-5
+    )
+    assert state.stats_l["b"].shape == (0,)
+
+
+def test_preconditioning_changes_the_direction():
+    # the graft preserves the AdamW step NORM but not its direction — assert
+    # Shampoo actually steers (i.e. the second-order path isn't an identity)
+    params = _params((16, 512), seed=3)
+    target = jnp.zeros_like(params["w"])
+    p_sh, _, _ = _run_steps(shampoo32(1e-2), params, target, 5)
+    p_ad, _, _ = _run_steps(adamw32(1e-2), params, target, 5)
+    assert not np.allclose(np.asarray(p_sh["w"]), np.asarray(p_ad["w"]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# trajectory parity: shampoo4bit vs the fp32 oracle (convergence-style)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", ["shampoo32", "shampoo4bit"])
+def test_shampoo_converges_on_quadratic(name):
+    params = _params((16, 512), seed=1)
+    target = jnp.ones_like(params["w"]) * 0.5
+    opt = make_optimizer(name, 2e-2, weight_decay=0.0)
+    _, _, low = _run_steps(opt, params, target, 250)
+    assert np.isfinite(low).all()
+    assert low[-1] < 0.02 * low[0]
+
+
+def test_shampoo4bit_tracks_fp32_oracle():
+    params = _params((16, 512), seed=2)
+    target = jnp.ones_like(params["w"]) * 0.5
+    _, _, base = _run_steps(make_optimizer("shampoo32", 2e-2, weight_decay=0.0),
+                            params, target, 250)
+    _, _, low = _run_steps(make_optimizer("shampoo4bit", 2e-2, weight_decay=0.0),
+                           params, target, 250)
+    # same tolerance style as the 4-bit AdamW parity tests: both reach the
+    # optimum; the 4-bit end point is within a small absolute gap
+    assert low[-1] < 0.02 * low[0]
+    assert abs(low[-1] - base[-1]) < 0.02 * low[0]
+
+
+# ---------------------------------------------------------------------------
+# state representation & memory (Tab. 4-style structural claims)
+# ---------------------------------------------------------------------------
+
+
+def test_4bit_factors_are_quantized_and_placeholders_stay_raw():
+    params = {"w": jnp.zeros((256, 512)), "b": jnp.zeros((8192,))}
+    s = make_optimizer("shampoo4bit", 1e-3).init(params)
+    for field in ("stats_l", "stats_r", "precond_l", "precond_r"):
+        leaf = s[field]["w"]
+        assert isinstance(leaf, QuantizedTensor), field
+        assert leaf.config.mapping == "dynamic" and leaf.config.bits == 4
+        # vector params: (0,) placeholder, protected by min_ndim=2 — raw
+        assert not isinstance(s[field]["b"], QuantizedTensor)
+        assert s[field]["b"].shape == (0,)
+    # grafting moments follow the paper's 4-bit AdamW recipe
+    assert s["m"]["w"].config.normalization == "blockwise"
+    assert s["v"]["w"].config.normalization == "rank1"
+    assert isinstance(s["m"]["b"], QuantizedTensor)  # 8192 > threshold
+
+
+def test_factor_bytes_cut_at_least_4x():
+    params = {"w": jnp.zeros((256, 512)), "w2": jnp.zeros((512, 384))}
+    s4 = make_optimizer("shampoo4bit", 1e-3).init(params)
+    s32 = make_optimizer("shampoo32", 1e-3).init(params)
+
+    def factor_bytes(s):
+        return sum(
+            state_nbytes(s[f]) for f in ("stats_l", "stats_r", "precond_l", "precond_r")
+        )
+
+    b4, b32 = factor_bytes(s4), factor_bytes(s32)
+    assert b32 > 0 and b4 * 4 <= b32
+    # and eval_shape sees the same structure (the drift gate runs structurally)
+    s4_shape = jax.eval_shape(make_optimizer("shampoo4bit", 1e-3).init, params)
+    assert factor_bytes(s4_shape) == b4
+
+
+# ---------------------------------------------------------------------------
+# kernel-route contract (pinned from shampoo.py's docstring)
+# ---------------------------------------------------------------------------
+
+
+def test_graft_moments_keep_kernel_eligible_layout_but_no_route_attached():
+    # (32, 512): > threshold, ndim >= 2, last dim % 256 == 0 — kernel-shaped
+    params = {"w": jnp.zeros((32, 512), jnp.float32)}
+    opt = make_optimizer("shampoo4bit", 1e-3)
+    state = opt.init(params)
+
+    # 1) the m/v layout is ELIGIBLE for the fused AdamW route (so a future
+    #    preconditioned kernel needs no state migration) ...
+    route = FusedAdamWRoute(lr=1e-3)
+    comp = {"m": state["m"]["w"], "v": state["v"]["w"]}
+    assert route.eligible(comp, params["w"])
+
+    # 2) ... but shampoo4bit attaches NO route: a whole-step Replace would
+    #    silently drop the preconditioning.  The update stream must therefore
+    #    contain ordinary additive leaves only.
+    g = {"w": jnp.ones((32, 512), jnp.float32) * 0.01}
+    new_params, _ = jax.jit(opt.update)(g, state, params)
+    assert not isinstance(new_params["w"], Replace)
+    assert new_params["w"].shape == (32, 512)
+    assert bool(jnp.all(jnp.isfinite(new_params["w"])))
+    assert not np.allclose(np.asarray(new_params["w"]), np.asarray(params["w"]))
+
+
+def test_shampoo_registered_in_optimizer_specs():
+    names = optimizer_names()
+    assert "shampoo32" in names and "shampoo4bit" in names
+    # sr variant constructs and steps
+    opt = make_optimizer("shampoo4bit", 1e-3, stochastic_rounding=True)
+    params = _params((16, 512))
+    state = opt.init(params)
+    g = jax.tree_util.tree_map(jnp.ones_like, params)
+    p2, _ = opt.update(g, state, params, key=jax.random.PRNGKey(0))
+    assert bool(jnp.all(jnp.isfinite(p2["w"])))
